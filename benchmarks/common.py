@@ -1,0 +1,76 @@
+"""Shared benchmark setup: schedulers, cluster sizes, trace scale, output."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.configs import ARCHS
+from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
+                        make_batch_trace, make_poisson_trace)
+from repro.core.policies import make_policy
+
+SCHEDULERS = ["gandiva", "tiresias", "dally-manual", "dally-nowait",
+              "dally-fullyconsolidated", "dally"]
+RACKS = (2, 4, 8, 16)
+N_BATCH_JOBS = 500   # paper §V-A
+N_POISSON_JOBS = 400
+SEED = 0
+
+ART = pathlib.Path(__file__).parent / "artifacts"
+
+
+def archs():
+    return list(ARCHS.values())
+
+
+def comm_model(calibrate: bool = False) -> CommModel:
+    """calibrate=True rescales per-arch gradient volume from the compiled
+    dry-run artifacts.  Off by default for the scheduler benchmarks: the
+    dry-run measures a 256-chip DP x TP x EP training step whose collective
+    mix (TP activations, EP dispatch, remat re-reduction) is not the pure
+    data-parallel gradient ring of the simulated 1-64 GPU jobs; using it
+    inflates MoE sensitivities by the clamp ceiling.  See EXPERIMENTS.md."""
+    cm = CommModel.from_configs(archs())
+    if calibrate:
+        d = ART / "dryrun" / "baseline"
+        if d.exists():
+            cm.load_calibration(str(d))
+    return cm
+
+
+_SIM_CACHE = {}
+
+
+def run_sim(policy: str, n_racks: int, *, trace="batch", n_jobs=None,
+            seed=SEED, comm=None):
+    key = (policy, n_racks, trace, n_jobs, seed, comm is None)
+    if comm is None and key in _SIM_CACHE:
+        return _SIM_CACHE[key]
+    use_cache = comm is None
+    comm = comm or comm_model()
+    if trace == "batch":
+        jobs = make_batch_trace(archs(), n_jobs=n_jobs or N_BATCH_JOBS,
+                                seed=seed)
+    else:
+        jobs = make_poisson_trace(archs(), n_jobs=n_jobs or N_POISSON_JOBS,
+                                  seed=seed)
+    sim = ClusterSimulator(ClusterTopology(n_racks=n_racks),
+                           make_policy(policy), comm)
+    for j in jobs:
+        sim.submit(j)
+    t0 = time.time()
+    res = sim.run()
+    res["wall_s"] = time.time() - t0
+    if use_cache:
+        _SIM_CACHE[key] = res
+    return res
+
+
+def save(name: str, data):
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(data, indent=1))
+
+
+def row(name: str, value, derived=""):
+    print(f"{name},{value},{derived}", flush=True)

@@ -1,0 +1,38 @@
+"""Fig. 11/12 analogue: cluster GPU utilization and jobs remaining over time
+(batch arrivals, 8 racks)."""
+from __future__ import annotations
+
+from .common import SCHEDULERS, comm_model, row, run_sim, save
+
+
+def main(small=False):
+    r = 4 if small else 8
+    n_jobs = 150 if small else None
+    out = {}
+    for pol in SCHEDULERS:
+        res = run_sim(pol, r, trace="batch", n_jobs=n_jobs)
+        tl = res["timeline"]
+        # decimate the timeline for the artifact
+        step = max(len(tl["t"]) // 200, 1)
+        out[pol] = {
+            "avg_utilization": res["avg_utilization"],
+            "t": tl["t"][::step],
+            "jobs_remaining": tl["jobs_remaining"][::step],
+            "busy_gpus": tl["busy_gpus"][::step],
+        }
+        row(f"fig11.avg_utilization.racks{r}.{pol}",
+            round(res["avg_utilization"], 3))
+        # completion-tail proxy: time from 90% jobs done to makespan
+        jr = tl["jobs_remaining"]
+        n0 = max(jr)
+        t90 = next((t for t, n in zip(tl["t"], jr) if n <= 0.1 * n0),
+                   tl["t"][-1] if tl["t"] else 0.0)
+        row(f"fig12.tail_fraction.racks{r}.{pol}",
+            round(1.0 - t90 / max(tl["t"][-1], 1.0), 3),
+            "fraction of makespan spent on the last 10% of jobs")
+    save("fig11_utilization", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

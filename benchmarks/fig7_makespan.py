@@ -1,0 +1,30 @@
+"""Fig. 7 analogue: makespan, batch arrivals, 2/4/8/16 racks, all schedulers."""
+from __future__ import annotations
+
+from .common import RACKS, SCHEDULERS, comm_model, row, run_sim, save
+
+
+def main(small=False):
+    racks = (2, 4) if small else RACKS
+    n_jobs = 150 if small else None
+    out = {}
+    for r in racks:
+        out[r] = {}
+        for pol in SCHEDULERS:
+            res = run_sim(pol, r, trace="batch", n_jobs=n_jobs)
+            out[r][pol] = res["makespan"]
+            row(f"fig7.makespan_hours.racks{r}.{pol}",
+                round(res["makespan"] / 3600, 2))
+        base = out[r]["tiresias"]
+        impr = 100 * (base - out[r]["dally"]) / base
+        row(f"fig7.dally_vs_tiresias_improvement_pct.racks{r}",
+            round(impr, 1), "paper: up to 69%")
+        imprg = 100 * (out[r]["gandiva"] - out[r]["dally"]) / out[r]["gandiva"]
+        row(f"fig7.dally_vs_gandiva_improvement_pct.racks{r}",
+            round(imprg, 1), "paper: up to 92%")
+    save("fig7_makespan", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig. 8 analogue: (a) P95/P99 tail queueing delay, (b) average exposed
+communication latency — batch arrivals across rack counts."""
+from __future__ import annotations
+
+from .common import RACKS, SCHEDULERS, comm_model, row, run_sim, save
+
+
+def main(small=False):
+    racks = (2, 4) if small else RACKS
+    n_jobs = 150 if small else None
+    out = {}
+    for r in racks:
+        out[r] = {}
+        for pol in SCHEDULERS:
+            res = run_sim(pol, r, trace="batch", n_jobs=n_jobs)
+            q = res["queueing_delay"]
+            out[r][pol] = {"p95_q": q["p95"], "p99_q": q["p99"],
+                           "avg_comm": res["comm_latency"]["avg"]}
+            row(f"fig8.p95_queue_hours.racks{r}.{pol}", round(q["p95"]/3600, 2))
+            row(f"fig8.avg_comm_hours.racks{r}.{pol}",
+                round(res["comm_latency"]["avg"]/3600, 3))
+        for ref in ("tiresias", "gandiva"):
+            for metric in ("p95_q", "avg_comm"):
+                b = out[r][ref][metric]
+                d = out[r]["dally"][metric]
+                if b > 0:
+                    row(f"fig8.dally_vs_{ref}.{metric}_impr_pct.racks{r}",
+                        round(100 * (b - d) / b, 1))
+    save("fig8_tails", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Fig. 9 analogue: JCT CDFs (batch arrivals, 8 racks)."""
+from __future__ import annotations
+
+from .common import SCHEDULERS, comm_model, row, run_sim, save
+
+
+def main(small=False):
+    r = 4 if small else 8
+    n_jobs = 150 if small else None
+    out = {}
+    for pol in SCHEDULERS:
+        res = run_sim(pol, r, trace="batch", n_jobs=n_jobs)
+        jcts = sorted(res["jct_values"])
+        deciles = [jcts[min(int(q / 100 * len(jcts)), len(jcts) - 1)]
+                   for q in range(0, 101, 10)]
+        out[pol] = deciles
+        row(f"fig9.jct_median_hours.racks{r}.{pol}",
+            round(deciles[5] / 3600, 2))
+    save("fig9_jct_cdf", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

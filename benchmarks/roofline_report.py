@@ -1,0 +1,53 @@
+"""§Roofline report: reads the dry-run artifacts and prints the three-term
+roofline per (arch × shape × mesh) plus the dominant bottleneck."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import ART, row
+
+HDR = ("arch,shape,mesh,status,compute_s,memory_s,collective_s,dominant,"
+       "useful_flop_ratio,roofline_fraction,fits_hbm")
+
+
+def load(tag="baseline"):
+    d = ART / "dryrun" / tag
+    recs = []
+    if d.exists():
+        for f in sorted(d.glob("*.json")):
+            recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def main(small=False, tag="baseline"):
+    recs = load(tag)
+    if not recs:
+        row("roofline.artifacts", 0, "run launch/dryrun.py --all first")
+        return {}
+    print(HDR)
+    ok = skip = err = 0
+    for r in recs:
+        if r["status"] == "ok":
+            ok += 1
+            rf = r["roofline"]
+            print(f"{r['arch']},{r['shape']},{r['mesh']},ok,"
+                  f"{rf['compute_s']:.4f},{rf['memory_s']:.4f},"
+                  f"{rf['collective_s']:.4f},{rf['dominant']},"
+                  f"{rf['useful_flop_ratio']:.3f},"
+                  f"{rf['roofline_fraction']:.4f},"
+                  f"{r['memory']['fits_hbm']}")
+        elif r["status"] == "skip":
+            skip += 1
+            print(f"{r['arch']},{r['shape']},{r['mesh']},skip,,,,,,,")
+        else:
+            err += 1
+            print(f"{r['arch']},{r['shape']},{r['mesh']},error,,,,,,,")
+    row("roofline.cells_ok", ok)
+    row("roofline.cells_skipped_architectural", skip)
+    row("roofline.cells_error", err)
+    return {"ok": ok, "skip": skip, "err": err}
+
+
+if __name__ == "__main__":
+    main()

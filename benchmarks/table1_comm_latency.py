@@ -1,0 +1,38 @@
+"""Table I analogue: per-model communication latency as % of compute time
+for machine / rack / network placements (8 accelerators), plus Tiresias skew
+— demonstrating the skew-vs-sensitivity divergence the paper critiques."""
+from __future__ import annotations
+
+from repro.configs import ARCHS
+from repro.core.trace import compute_time_per_iter, model_skew
+
+from .common import comm_model, row, save
+
+
+def main(small=False):
+    cm = comm_model()
+    table = {}
+    print("model,skew,machine_pct,rack_pct,network_pct")
+    for name, cfg in ARCHS.items():
+        t = compute_time_per_iter(cfg.n_active_params(), 1024)
+        s = cm.sensitivity_pct(name, t, 8)
+        skew = model_skew(cfg)
+        table[name] = {"skew": round(skew, 4), "compute_s": t,
+                       **{k: round(v, 1) for k, v in s.items()}}
+        print(f"{name},{skew:.3f},{s['machine']:.1f},{s['rack']:.1f},"
+              f"{s['network']:.1f}")
+    save("table1_comm_latency", table)
+    # the paper's point: rank correlation between skew and sensitivity is weak
+    names = list(table)
+    by_skew = sorted(names, key=lambda n: -table[n]["skew"])
+    by_sens = sorted(names, key=lambda n: -table[n]["network"])
+    top_skew = set(by_skew[:3])
+    top_sens = set(by_sens[:3])
+    overlap = len(top_skew & top_sens)
+    row("table1.skew_top3_vs_sensitivity_top3_overlap", overlap,
+        "skew is a weak sensitivity proxy (paper Table I)")
+    return table
+
+
+if __name__ == "__main__":
+    main()

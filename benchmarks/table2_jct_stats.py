@@ -1,0 +1,27 @@
+"""Table II analogue: batch-arrival JCT statistics (8 racks)."""
+from __future__ import annotations
+
+from .common import SCHEDULERS, comm_model, row, run_sim, save
+
+
+def main(small=False):
+    r = 4 if small else 8
+    n_jobs = 150 if small else None
+    out = {}
+    for pol in SCHEDULERS:
+        res = run_sim(pol, r, trace="batch", n_jobs=n_jobs)
+        out[pol] = res["jct"]
+        s = res["jct"]
+        row(f"table2.batch_jct_seconds.racks{r}.{pol}",
+            f"avg={s['avg']:.0f};median={s['median']:.0f};"
+            f"p95={s['p95']:.0f};p99={s['p99']:.0f}")
+    for m in ("avg", "p95", "p99"):
+        b = out["tiresias"][m]
+        row(f"table2.dally_vs_tiresias.{m}_impr_pct",
+            round(100 * (b - out["dally"][m]) / b, 1))
+    save("table2_jct_stats", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Run the paper's headline experiment at demo scale: Dally vs Tiresias vs
+Gandiva on a congested batch trace.
+
+    PYTHONPATH=src python examples/cluster_scheduling.py
+"""
+from repro.configs import ARCHS
+from repro.core import ClusterSimulator, ClusterTopology, CommModel, \
+    make_batch_trace
+from repro.core.policies import make_policy
+
+POLICIES = ["gandiva", "tiresias", "dally-nowait", "dally"]
+
+
+def main():
+    archs = list(ARCHS.values())
+    comm = CommModel.from_configs(archs)
+    print(f"{'scheduler':18s} {'makespan':>10s} {'avg JCT':>9s} "
+          f"{'p95 queue':>10s} {'avg comm':>9s} {'util':>5s}")
+    results = {}
+    for pol in POLICIES:
+        jobs = make_batch_trace(archs, n_jobs=200, seed=1)
+        sim = ClusterSimulator(ClusterTopology(n_racks=4),
+                               make_policy(pol), comm)
+        for j in jobs:
+            sim.submit(j)
+        r = sim.run()
+        results[pol] = r
+        print(f"{pol:18s} {r['makespan']/3600:9.1f}h "
+              f"{r['jct']['avg']/3600:8.1f}h "
+              f"{r['queueing_delay']['p95']/3600:9.1f}h "
+              f"{r['comm_latency']['avg']/3600:8.2f}h "
+              f"{r['avg_utilization']:5.2f}")
+    t = results["tiresias"]["makespan"]
+    d = results["dally"]["makespan"]
+    print(f"\nDally improves makespan vs Tiresias by {100*(t-d)/t:.1f}% "
+          "(paper: up to 69% at full scale)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""hubert-xlarge — encoder-only audio transformer (w2v2 architecture).
+
+[arXiv:2106.07447; unverified]  48L d_model=1280 16H (kv=16) d_ff=5120
+vocab=504 (cluster targets).  Bidirectional attention, GELU MLP, no decode
+step.  The audio frontend (conv feature extractor) is a stub: input_specs()
+feeds precomputed frame embeddings (B, n_frames, d_model).
+"""
+from repro.types import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab=504,
+    mlp_kind="gelu",
+    causal=False,
+    has_decoder=False,
+    frontend="audio",
+    rope_theta=10_000.0,
+    source="[arXiv:2106.07447; unverified]",
+)

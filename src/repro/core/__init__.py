@@ -1,0 +1,20 @@
+"""Dally: network-placement sensitive cluster scheduling (the paper's core).
+
+Components (paper §IV):
+  topology    — hierarchical cluster (machine / rack / network tiers)
+  commmodel   — per-placement communication latency (ASTRA-sim analogue,
+                calibrated against this repo's compiled dry-run collectives)
+  simulator   — event-driven multi-job cluster simulator (ArtISt-sim analogue)
+  autotuner   — delay-timer auto-tuning from starvation-time history (Algo 2)
+  policies    — Dally (Algo 1 + Nw_sens preemption), Tiresias, Gandiva,
+                Dally-manual / -noWait / -fullyConsolidated
+  trace       — batch + Poisson workload generators (SenseTime-like stats)
+  metrics     — makespan / JCT / queueing delay / communication latency
+"""
+from .autotuner import AutoTuner  # noqa: F401
+from .commmodel import CommModel  # noqa: F401
+from .job import Job  # noqa: F401
+from .metrics import summarize  # noqa: F401
+from .simulator import ClusterSimulator  # noqa: F401
+from .topology import ClusterTopology, Placement  # noqa: F401
+from .trace import make_batch_trace, make_poisson_trace  # noqa: F401

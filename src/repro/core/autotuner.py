@@ -1,0 +1,70 @@
+"""Delay-timer auto-tuner (paper Algo 2).
+
+Maintains per-(tier x GPU-demand) lists of observed starvation (wait) times.
+``get_tuned_timers`` returns mean + 2*stddev over a sliding window — two
+standard deviations above the mean = 95% confidence, the paper's choice.
+
+Window semantics: Algo 2's pseudocode compares entries against
+HISTORY_TIME_LIMIT directly; the prose ("sliding window size", "larger
+clusters need a smaller history limit because more jobs get placed over
+time") implies an *age*-based window.  We implement the age-based reading
+(entries observed more than HISTORY_TIME_LIMIT ago are dropped) and note the
+ambiguity in DESIGN.md.
+"""
+from __future__ import annotations
+
+import math
+from collections import defaultdict, deque
+from typing import Dict, Tuple
+
+
+class AutoTuner:
+    def __init__(self, history_time_limit: float = 7 * 24 * 3600.0,
+                 default_machine: float = 12 * 3600.0,
+                 default_rack: float = 12 * 3600.0):
+        self.history_time_limit = history_time_limit
+        self.default = {"machine": default_machine, "rack": default_rack}
+        # (tier, g) -> deque of (observed_at, wait_time)
+        self.lists: Dict[Tuple[str, int], deque] = defaultdict(deque)
+        self._cache: Dict[Tuple[int, float], Tuple[float, float]] = {}
+
+    def update_demand_delay(self, tier: str, wait_time: float, g: int,
+                            now: float):
+        """Paper Algo 1 lines 7/15: record the starvation time that preceded
+        an accepted offer at this consolidation tier."""
+        self.lists[(tier, g)].append((now, wait_time))
+        self._cache.clear()
+
+    def _window(self, tier: str, g: int, now: float):
+        dq = self.lists[(tier, g)]
+        while dq and now - dq[0][0] > self.history_time_limit:
+            dq.popleft()
+        return [w for _, w in dq]
+
+    def get_tuned_timers(self, g: int, now: float) -> Tuple[float, float]:
+        """Returns (T_machine, T_rack) = mean + 2*stddev per tier.
+
+        A (tier, g) bucket with no history falls back to the tier's history
+        aggregated across all demands (rare demands would otherwise sit on
+        the cold-start default forever — they only record on acceptance *at*
+        that tier), then to the default."""
+        hit = self._cache.get((g, now))
+        if hit is not None:
+            return hit
+        out = []
+        for tier in ("machine", "rack"):
+            xs = self._window(tier, g, now)
+            if not xs:
+                xs = [w for (t2, _), dq in self.lists.items() if t2 == tier
+                      for (ts, w) in dq
+                      if now - ts <= self.history_time_limit]
+            if not xs:
+                out.append(self.default[tier])
+                continue
+            mean = sum(xs) / len(xs)
+            var = sum((x - mean) ** 2 for x in xs) / max(len(xs) - 1, 1)
+            out.append(mean + 2.0 * math.sqrt(var))
+        if len(self._cache) > 4096:
+            self._cache.clear()
+        self._cache[(g, now)] = (out[0], out[1])
+        return out[0], out[1]

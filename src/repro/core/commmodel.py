@@ -1,0 +1,136 @@
+"""Per-placement communication latency model (the ASTRA-sim analogue).
+
+For a data-parallel job the per-iteration exposed communication time is a
+hierarchical ring all-reduce of the model's gradient bytes over the worst
+network tier the placement spans, minus the compute it overlaps with:
+
+  T_ar(tier) = 2(n-1)/n * M / bw(tier) + 2(n-1) * alpha(tier) * n_buckets
+  hierarchical: intra-machine stage at machine bw + inter-node stage at tier bw
+  exposed = max(0, T_comm - overlap_frac * T_compute)
+
+M (gradient bytes) and n_buckets (layers) come from the real architecture
+configs; an optional calibration factor per arch is derived from the compiled
+dry-run artifacts (measured collective bytes / analytic bytes), mirroring the
+paper's <1% calibration of ASTRA-sim workload files against real runs.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+from typing import Dict, Optional
+
+from repro.types import HardwareProfile, TPU_V5E
+
+from .topology import Placement
+
+
+class CommModel:
+    def __init__(self, arch_table: Dict[str, dict],
+                 profile: HardwareProfile = TPU_V5E,
+                 overlap_frac: float = 0.25,
+                 grad_dtype_bytes: int = 2,
+                 calibration: Optional[Dict[str, float]] = None):
+        """arch_table: name -> {"params": N, "layers": L} (+ optional extras)."""
+        self.arch_table = arch_table
+        self.profile = profile
+        self.overlap_frac = overlap_frac
+        self.grad_dtype_bytes = grad_dtype_bytes
+        self.calibration = calibration or {}
+
+    # -- construction helpers -------------------------------------------
+    @classmethod
+    def from_configs(cls, configs, **kw):
+        table = {}
+        for cfg in configs:
+            # gradients synchronize ALL parameters (an MoE job must all-reduce
+            # every expert even though compute touches only top-k — this is
+            # precisely what makes per-model network sensitivity diverge,
+            # the paper's Table I phenomenon)
+            table[cfg.name] = {"params": cfg.n_params(),
+                               "layers": cfg.n_layers}
+        return cls(table, **kw)
+
+    def load_calibration(self, artifact_dir: str, shape: str = "train_4k",
+                         mesh: str = "pod16x16"):
+        """Calibrate per-arch gradient volume against the compiled dry-run:
+        factor = measured collective bytes / analytic ring all-reduce bytes.
+        Mirrors ArtISt-sim's calibration of ASTRA-sim workload files."""
+        d = pathlib.Path(artifact_dir)
+        for name in self.arch_table:
+            f = d / f"{name}__{shape}__{mesh}.json"
+            if not f.exists():
+                continue
+            rec = json.loads(f.read_text())
+            if rec.get("status") != "ok":
+                continue
+            measured = rec["hlo"]["collective_bytes"]
+            grad = self.arch_table[name]["params"] * self.grad_dtype_bytes
+            if grad > 0 and measured > 0:
+                # per-device measured vs 2M/n analytic per device
+                n = rec.get("n_chips", 256)
+                analytic = 2.0 * grad / n
+                self.calibration[name] = min(max(measured / analytic, 0.1),
+                                             50.0)
+
+    # -- core latency model ---------------------------------------------
+    def _ring(self, bytes_, n, tier_name, n_buckets):
+        if n <= 1:
+            return 0.0
+        t = self.profile.tier(tier_name)
+        bw_time = 2.0 * (n - 1) / n * bytes_ / t.bandwidth
+        lat_time = 2.0 * (n - 1) * t.latency * n_buckets
+        return bw_time + lat_time
+
+    def allreduce_time(self, model: str, placement: Placement,
+                       machines_per_rack: int,
+                       gpus_per_machine: int) -> float:
+        """Hierarchical all-reduce time for one iteration's gradients."""
+        info = self.arch_table[model]
+        M = info["params"] * self.grad_dtype_bytes
+        M *= self.calibration.get(model, 1.0)
+        L = max(info["layers"], 1)
+        tier = placement.tier(machines_per_rack)
+        n_machines = len(placement.machines())
+        n_gpus = placement.n_gpus
+
+        if tier == "machine":
+            return self._ring(M, n_gpus, "machine", L)
+        # stage 1: reduce within each machine (max gpus on one machine)
+        max_local = max(c for _, c in placement.alloc)
+        t = self._ring(M, max_local, "machine", L)
+        # stage 2: ring across machine leaders at the bottleneck tier
+        t += self._ring(M, n_machines, tier, L)
+        return t
+
+    def iteration_time(self, model: str, compute_time: float,
+                       placement: Placement, machines_per_rack: int,
+                       gpus_per_machine: int):
+        """Returns (iter_time, exposed_comm_per_iter)."""
+        t_comm = self.allreduce_time(model, placement, machines_per_rack,
+                                     gpus_per_machine)
+        exposed = max(0.0, t_comm - self.overlap_frac * compute_time)
+        return compute_time + exposed, exposed
+
+    def sensitivity_pct(self, model: str, compute_time: float, g: int,
+                        machines_per_rack: int = 8,
+                        gpus_per_machine: int = 8) -> Dict[str, float]:
+        """Table-I analogue: comm latency as % of compute per tier."""
+        out = {}
+        for tier in ("machine", "rack", "network"):
+            pl = self._canonical_placement(g, tier, machines_per_rack,
+                                           gpus_per_machine)
+            t = self.allreduce_time(model, pl, machines_per_rack,
+                                    gpus_per_machine)
+            out[tier] = 100.0 * t / max(compute_time, 1e-12)
+        return out
+
+    @staticmethod
+    def _canonical_placement(g, tier, machines_per_rack, gpus_per_machine):
+        if tier == "machine":
+            return Placement(((0, g),))
+        if tier == "rack":
+            per = max(1, g // 2)
+            return Placement(((0, per), (1, g - per)))
+        return Placement(((0, max(1, g // 2)),
+                          (machines_per_rack, g - max(1, g // 2))))

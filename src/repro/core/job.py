@@ -1,0 +1,77 @@
+"""Job model and priority metrics (paper §IV-B1).
+
+Nw_sens = W_compl / T_norm, with
+  W_compl = iters_done / total_iters
+  T_norm  = t_run / (compute_time_per_iter * total_iters)
+Low Nw_sens => the job suffered network-induced slowdowns => offer first.
+
+2DAS (Tiresias) = t_run * n_gpus, discretized into MLFQ levels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .topology import Placement
+
+
+@dataclass
+class Job:
+    job_id: int
+    model: str                   # arch name (network-sensitivity key)
+    n_gpus: int
+    total_iters: int
+    compute_time_per_iter: float  # seconds, no communication (ideal)
+    arrival: float = 0.0
+    skew: float = 0.0            # largest tensor / model size (Tiresias)
+
+    # dynamic state ------------------------------------------------------
+    iters_done: int = 0
+    t_run: float = 0.0           # total time spent in the run queue
+    t_queue: float = 0.0         # total time spent waiting
+    comm_time: float = 0.0       # exposed communication time accumulated
+    placement: Optional[Placement] = None
+    iter_time: float = 0.0       # current per-iteration time (w/ comm)
+    run_start: float = 0.0       # when the current run segment started
+    last_assignment_time: Optional[float] = None  # for T_starvation
+    wait_since: float = 0.0      # when the job (re)entered the wait queue
+    finish_time: Optional[float] = None
+    preemptions: int = 0
+    started_once: bool = False
+
+    def remaining_iters(self) -> int:
+        return max(self.total_iters - self.iters_done, 0)
+
+    @property
+    def ideal_runtime(self) -> float:
+        return self.compute_time_per_iter * self.total_iters
+
+    def _live(self, now: Optional[float]):
+        """(t_run, iters_done) including the in-flight run segment."""
+        t_run, iters = self.t_run, self.iters_done
+        if (now is not None and self.placement is not None
+                and now > self.run_start):
+            el = now - self.run_start
+            t_run += el
+            iters = min(iters + int(el / max(self.iter_time, 1e-9)),
+                        self.total_iters)
+        return t_run, iters
+
+    def nw_sens(self, now: Optional[float] = None) -> float:
+        """Network-sensitive priority; lower = more starved = higher prio."""
+        t_run, iters = self._live(now)
+        if t_run <= 0.0:
+            return 0.0  # never ran: maximally starved
+        w_compl = iters / max(self.total_iters, 1)
+        t_norm = t_run / max(self.ideal_runtime, 1e-9)
+        return w_compl / max(t_norm, 1e-12)
+
+    def two_das(self, now: Optional[float] = None) -> float:
+        t_run, _ = self._live(now)
+        return t_run * self.n_gpus
+
+    def starvation(self, now: float) -> float:
+        ref = self.last_assignment_time
+        if ref is None:
+            ref = self.arrival
+        return max(now - ref, 0.0)

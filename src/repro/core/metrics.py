@@ -1,0 +1,68 @@
+"""Performance metrics (paper §V-D): makespan, JCT, queueing delay,
+communication latency, plus utilization / jobs-remaining timelines."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+def _pct(xs: List[float], p: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    k = min(int(p / 100.0 * len(xs)), len(xs) - 1)
+    return xs[k]
+
+
+def _stats(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"avg": 0.0, "median": 0.0, "p95": 0.0, "p99": 0.0}
+    return {
+        "avg": sum(xs) / len(xs),
+        "median": _pct(xs, 50),
+        "p95": _pct(xs, 95),
+        "p99": _pct(xs, 99),
+    }
+
+
+@dataclass
+class Timeline:
+    t: List[float] = field(default_factory=list)
+    busy_gpus: List[int] = field(default_factory=list)
+    total_gpus: List[int] = field(default_factory=list)
+    jobs_remaining: List[int] = field(default_factory=list)
+
+    def record(self, t, busy, total, remaining):
+        self.t.append(t)
+        self.busy_gpus.append(busy)
+        self.total_gpus.append(total)
+        self.jobs_remaining.append(remaining)
+
+    def avg_utilization(self) -> float:
+        if not self.t:
+            return 0.0
+        return sum(b / max(g, 1) for b, g in
+                   zip(self.busy_gpus, self.total_gpus)) / len(self.t)
+
+
+def summarize(finished, timeline: Timeline) -> Dict:
+    jcts = [j.finish_time - j.arrival for j in finished]
+    queue = [j.t_queue for j in finished]
+    comm = [j.comm_time for j in finished]
+    makespan = (max(j.finish_time for j in finished)
+                - min(j.arrival for j in finished)) if finished else 0.0
+    return {
+        "n_finished": len(finished),
+        "makespan": makespan,
+        "jct": _stats(jcts),
+        "queueing_delay": _stats(queue),
+        "comm_latency": _stats(comm),
+        "avg_utilization": timeline.avg_utilization(),
+        "preemptions": sum(j.preemptions for j in finished),
+        "jct_values": jcts,
+        "timeline": {
+            "t": timeline.t,
+            "jobs_remaining": timeline.jobs_remaining,
+            "busy_gpus": timeline.busy_gpus,
+        },
+    }

@@ -1,0 +1,22 @@
+from .base import Policy  # noqa: F401
+from .dally import DallyPolicy  # noqa: F401
+from .gandiva import GandivaPolicy  # noqa: F401
+from .tiresias import TiresiasPolicy  # noqa: F401
+from .variants import (  # noqa: F401
+    DallyFullyConsolidatedPolicy,
+    DallyManualPolicy,
+    DallyNoWaitPolicy,
+)
+
+POLICIES = {
+    "dally": DallyPolicy,
+    "dally-manual": DallyManualPolicy,
+    "dally-nowait": DallyNoWaitPolicy,
+    "dally-fullyconsolidated": DallyFullyConsolidatedPolicy,
+    "tiresias": TiresiasPolicy,
+    "gandiva": GandivaPolicy,
+}
+
+
+def make_policy(name: str, **kw) -> Policy:
+    return POLICIES[name.lower()](**kw)

@@ -1,0 +1,33 @@
+"""Scheduler policy interface.
+
+The simulator calls, each scheduling round:
+  priority(job, now)         — lower value = served first (offers + GPUs)
+  on_offer(job, sim, now)    — the job's *local scheduler*: given current
+                               availability, return the consolidation level
+                               to accept ("machine"|"rack"|"network") or None
+                               to keep waiting
+  wants_preemption(...)      — whether a waiting job may evict running ones
+  on_round(sim, now)         — optional per-round hook (e.g. migration)
+"""
+from __future__ import annotations
+
+
+class Policy:
+    name = "base"
+    preemption_enabled = True
+    # minimum priority-value gap (in the policy's own priority units) between
+    # a running victim and the waiting job before eviction is allowed
+    preemption_margin = 0.3
+
+    def priority(self, job, now: float) -> float:
+        raise NotImplementedError
+
+    def on_offer(self, job, sim, now: float):
+        raise NotImplementedError
+
+    def on_round(self, sim, now: float):
+        return
+
+    def record_acceptance(self, job, tier: str, now: float):
+        """Called after a job accepts an offer (auto-tuner hook)."""
+        return

@@ -1,0 +1,75 @@
+"""Dally (paper §IV-B): delay scheduling (Algo 1) + Nw_sens preemption
+priority + auto-tuned delay timers (Algo 2)."""
+from __future__ import annotations
+
+from repro.core.autotuner import AutoTuner
+
+from .base import Policy
+
+
+class DallyPolicy(Policy):
+    name = "dally"
+
+    def __init__(self, history_time_limit: float = 7 * 24 * 3600.0,
+                 default_machine: float = 12 * 3600.0,
+                 default_rack: float = 12 * 3600.0):
+        self.tuner = AutoTuner(history_time_limit=history_time_limit,
+                               default_machine=default_machine,
+                               default_rack=default_rack)
+
+    # resource offers go out in increasing Nw_sens (most starved first)
+    def priority(self, job, now):
+        return job.nw_sens(now)
+
+    def _timers(self, job, sim, now):
+        t_mc, t_rk = self.tuner.get_tuned_timers(job.n_gpus, now)
+        # a job that cannot fit a machine/rack has the respective timer at 0
+        if job.n_gpus > sim.cluster.gpus_per_machine:
+            t_mc = 0.0
+        rack_cap = sim.cluster.machines_per_rack * sim.cluster.gpus_per_machine
+        if job.n_gpus > rack_cap:
+            t_rk = 0.0
+        return t_mc, t_rk
+
+    # Algorithm 1: On Resource Offer
+    def on_offer(self, job, sim, now):
+        cl = sim.cluster
+        g = job.n_gpus
+        t_starv = job.starvation(now)
+        t_mc, t_rk = self._timers(job, sim, now)
+
+        if cl.max_free_on_machine() >= g:
+            return "machine"
+        if t_starv < t_mc:
+            return None  # reject: keep waiting for a machine-level offer
+        if cl.max_free_on_rack() >= g:
+            return "rack"
+        if t_starv < t_rk:
+            return None  # reject: keep waiting for a rack-level offer
+        if cl.free_gpus() >= g:
+            return "network"
+        return None  # nothing to allocate at all
+
+    def record_acceptance(self, job, tier, now):
+        if tier in ("machine", "rack"):
+            self.tuner.update_demand_delay(tier, job.starvation(now),
+                                           job.n_gpus, now)
+
+    # Network-sensitive consolidation upgrades (paper §VI-3): jobs with low
+    # Nw_sens — i.e. suffering from a sub-optimal placement — receive the
+    # most favorable offers, including migration of *running* jobs to a
+    # strictly better tier when one becomes reachable.
+    upgrades_per_round = 4
+    upgrade_min_runtime = 900.0
+
+    def on_round(self, sim, now):
+        done = 0
+        for job in sorted(sim.running, key=lambda j: j.nw_sens(now)):
+            if done >= self.upgrades_per_round:
+                break
+            if now - job.run_start < self.upgrade_min_runtime:
+                continue
+            level = sim.upgrade_level(job)
+            if level is not None:
+                sim.migrate(job, level, now)
+                done += 1

@@ -1,0 +1,50 @@
+"""Gandiva baseline (Xiao et al., OSDI'18) as reproduced in the paper.
+
+Network-agnostic: jobs accept whatever GPUs are free (no consolidation
+preference, FIFO priority).  Its introspective *migration* is modelled per
+the paper's description: whenever resources free up, running jobs are
+opportunistically migrated to a better consolidation tier (at a restart
+cost).
+"""
+from __future__ import annotations
+
+from .base import Policy
+
+
+class GandivaPolicy(Policy):
+    name = "gandiva"
+    preemption_enabled = False  # Gandiva packs/migrates; no priority eviction
+
+    def __init__(self, migrate: bool = True):
+        self.migrate = migrate
+
+    def priority(self, job, now):
+        return job.arrival  # FIFO
+
+    def on_offer(self, job, sim, now):
+        # network-agnostic: take whatever fragments are free, as-is
+        return "scatter" if sim.cluster.free_gpus() >= job.n_gpus else None
+
+    def on_round(self, sim, now):
+        if not self.migrate:
+            return
+        # migrate at most one job per round to a strictly better tier
+        order = {"machine": 0, "rack": 1, "network": 2}
+        best = None
+        for job in sim.running:
+            tier = job.placement.tier(sim.cluster.machines_per_rack)
+            if tier == "machine":
+                continue
+            # would it fit better if re-placed right now (using its own gpus)?
+            sim.cluster.release(job.placement)
+            target = sim.cluster.best_feasible_level(job.n_gpus)
+            feasible_better = (target is not None
+                               and order[target] < order[tier])
+            if feasible_better and (best is None or order[target] <
+                                    order[best[1]]):
+                best = (job, target)
+            # re-take original placement
+            for m, c in job.placement.alloc:
+                sim.cluster.free[m] -= c
+        if best is not None:
+            sim.migrate(best[0], best[1], now)

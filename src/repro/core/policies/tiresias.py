@@ -1,0 +1,53 @@
+"""Tiresias baseline (Gu et al., NSDI'19) as reproduced in the paper.
+
+* Priority: Discretized 2D-LAS (2DAS = t_run * n_gpus) — MLFQ with K levels;
+  lower attained service = higher priority, FIFO within a level.
+* Placement: skew-based consolidation.  High-skew models (largest tensor /
+  model size above a threshold) demand the fewest machines possible
+  (machine-level if the job fits one machine, else rack-level) and keep
+  waiting otherwise; low-skew models accept any offer.
+"""
+from __future__ import annotations
+
+from .base import Policy
+
+
+class TiresiasPolicy(Policy):
+    name = "tiresias"
+    # Tiresias preempts on MLFQ level changes only: a waiting job evicts a
+    # running one only from a strictly lower queue (priority unit = 1e12)
+    preemption_margin = 0.5e12
+
+    def __init__(self, queue_thresholds=(3600.0 * 8, 3600.0 * 64),
+                 skew_threshold: float = 0.15):
+        self.queue_thresholds = queue_thresholds
+        self.skew_threshold = skew_threshold
+
+    def priority(self, job, now):
+        das = job.two_das(now)
+        level = 0
+        for th in self.queue_thresholds:
+            if das > th:
+                level += 1
+        # MLFQ: level first, then FIFO (arrival) within the level
+        return level * 1e12 + job.arrival
+
+    def on_offer(self, job, sim, now):
+        cl = sim.cluster
+        g = job.n_gpus
+        if job.skew >= self.skew_threshold:
+            # stringent consolidation for skewed models
+            if g <= cl.gpus_per_machine:
+                if cl.max_free_on_machine() >= g:
+                    return "machine"
+                return None  # wait indefinitely for machine-level
+            rack_cap = cl.machines_per_rack * cl.gpus_per_machine
+            if g <= rack_cap:
+                if cl.max_free_on_rack() >= g:
+                    return "rack"
+                return None
+            return "network" if cl.free_gpus() >= g else None
+        # low skew: accept any offer — i.e. whatever fragments are free
+        # (Tiresias is consolidation-blind for non-skewed models; this is
+        # exactly the paper's critique when skew mispredicts sensitivity)
+        return "scatter" if cl.free_gpus() >= g else None

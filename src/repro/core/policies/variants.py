@@ -1,0 +1,49 @@
+"""Dally ablations used as baselines in the paper (§V-C).
+
+All keep Dally's Nw_sens preemption; only the delay-timer source differs.
+"""
+from __future__ import annotations
+
+from .dally import DallyPolicy
+
+_INF = float("inf")
+
+
+class DallyManualPolicy(DallyPolicy):
+    """Hand-set fixed timers (the YARN-style configuration): 12h machine-level
+    + another 12h rack-level (24h total), never adapted."""
+    name = "dally-manual"
+
+    def __init__(self, machine_timer: float = 12 * 3600.0,
+                 rack_timer: float = 12 * 3600.0):
+        super().__init__()
+        self._fixed = (machine_timer, rack_timer)
+
+    def _timers(self, job, sim, now):
+        t_mc, t_rk = self._fixed
+        if job.n_gpus > sim.cluster.gpus_per_machine:
+            t_mc = 0.0
+        rack_cap = sim.cluster.machines_per_rack * sim.cluster.gpus_per_machine
+        if job.n_gpus > rack_cap:
+            t_rk = 0.0
+        return t_mc, t_rk
+
+    def record_acceptance(self, job, tier, now):
+        return  # no tuning
+
+
+class DallyNoWaitPolicy(DallyManualPolicy):
+    """Timers = 0: accept whatever consolidation is available right now."""
+    name = "dally-nowait"
+
+    def __init__(self):
+        super().__init__(machine_timer=0.0, rack_timer=0.0)
+
+
+class DallyFullyConsolidatedPolicy(DallyManualPolicy):
+    """Waits as long as needed for the most consolidated placement that can
+    ever fit the job (machine if g <= 8, else rack, else network)."""
+    name = "dally-fullyconsolidated"
+
+    def __init__(self):
+        super().__init__(machine_timer=_INF, rack_timer=_INF)

@@ -1,0 +1,228 @@
+"""Event-driven multi-job DL-cluster simulator (the ArtISt-sim analogue).
+
+Iteration-level fidelity in the Themis sense: a job's progress is tracked in
+iterations, and every (re)placement triggers a fresh per-iteration latency
+query against the communication model — the dynamic "invoke ASTRA-sim per
+placement" behaviour that distinguishes ArtISt-sim from static-penalty
+simulators (paper §IV-C, Fig. 6).
+
+Events: job arrival, scheduling round (period `round_period`), job
+completion, optional machine-slowdown (straggler) events.  Preemption saves
+(iters_done, optimizer state) and restores after `restore_time` — the paper's
+checkpoint/resume contract (§IV-B).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .commmodel import CommModel
+from .job import Job
+from .metrics import Timeline
+from .topology import ClusterTopology
+
+ARRIVAL, ROUND, COMPLETE, SLOWDOWN = 0, 1, 2, 3
+
+
+class ClusterSimulator:
+    def __init__(self, cluster: ClusterTopology, policy, comm: CommModel,
+                 *, round_period: float = 300.0, restore_time: float = 30.0,
+                 preemption_min_runtime: float = 1800.0,
+                 max_preemptions_per_round: int = 4,
+                 slowdown_events: Optional[List] = None):
+        self.cluster = cluster
+        self.policy = policy
+        self.comm = comm
+        self.round_period = round_period
+        self.restore_time = restore_time
+        self.preemption_min_runtime = preemption_min_runtime
+        self.max_preemptions_per_round = max_preemptions_per_round
+
+        self.clock = 0.0
+        self.events: List = []
+        self._seq = 0
+        self.waiting: List[Job] = []
+        self.running: List[Job] = []
+        self.finished: List[Job] = []
+        self.jobs: Dict[int, Job] = {}
+        self.timeline = Timeline()
+        self.machine_slowdown: Dict[int, float] = {}
+        for t, machine, factor in (slowdown_events or []):
+            self._push(t, SLOWDOWN, (machine, factor))
+        self._completion_version: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    def _push(self, t, kind, payload):
+        self._seq += 1
+        heapq.heappush(self.events, (t, kind, self._seq, payload))
+
+    def submit(self, job: Job):
+        self.jobs[job.job_id] = job
+        self._push(job.arrival, ARRIVAL, job.job_id)
+
+    # ------------------------------------------------------------------
+    def _slow_factor(self, placement) -> float:
+        f = 1.0
+        for m, _ in placement.alloc:
+            f = max(f, self.machine_slowdown.get(m, 1.0))
+        return f
+
+    def _start(self, job: Job, level: str, now: float):
+        placement = self.cluster.allocate(job.n_gpus, level)
+        assert placement is not None, (job.job_id, level)
+        tier = placement.tier(self.cluster.machines_per_rack)
+        self.policy.record_acceptance(job, tier, now)
+        job.t_queue += now - job.wait_since
+        job.placement = placement
+        it, exposed = self.comm.iteration_time(
+            job.model, job.compute_time_per_iter, placement,
+            self.cluster.machines_per_rack, self.cluster.gpus_per_machine)
+        it *= self._slow_factor(placement)
+        job.iter_time = it
+        job.exposed_comm_per_iter = exposed
+        restore = self.restore_time if job.started_once else 0.0
+        job.run_start = now + restore
+        job.started_once = True
+        job.last_assignment_time = now
+        self.running.append(job)
+        self.waiting.remove(job)
+        t_end = job.run_start + job.remaining_iters() * it
+        v = self._completion_version.get(job.job_id, 0) + 1
+        self._completion_version[job.job_id] = v
+        self._push(t_end, COMPLETE, (job.job_id, v))
+
+    def _progress(self, job: Job, now: float):
+        """Account the progress of a running job up to `now`."""
+        elapsed = max(now - job.run_start, 0.0)
+        iters = min(int(elapsed / max(job.iter_time, 1e-9)),
+                    job.remaining_iters())
+        job.iters_done += iters
+        job.t_run += elapsed
+        job.comm_time += iters * getattr(job, "exposed_comm_per_iter", 0.0)
+        job.run_start = now
+
+    def preempt(self, job: Job, now: float):
+        self._progress(job, now)
+        self.cluster.release(job.placement)
+        job.placement = None
+        job.preemptions += 1
+        self._completion_version[job.job_id] += 1  # invalidate completion
+        self.running.remove(job)
+        self.waiting.append(job)
+        job.wait_since = now
+        # starvation clock restarts: the job HELD resources until now, so its
+        # wait towards the delay timers begins at the preemption instant
+        # (otherwise run time would count as starvation and poison Algo 2's
+        # wait-time lists)
+        job.last_assignment_time = now
+
+    def migrate(self, job: Job, level: str, now: float):
+        """Migration = preempt + immediate restart at the given level."""
+        self.preempt(job, now)
+        self._start(job, level, now)
+
+    TIER_ORDER = {"machine": 0, "rack": 1, "network": 2}
+
+    def upgrade_level(self, job: Job) -> Optional[str]:
+        """Best strictly-better consolidation level reachable for a running
+        job using free GPUs + its own (released) allocation; None if none."""
+        cur = job.placement.tier(self.cluster.machines_per_rack)
+        if cur == "machine":
+            return None
+        self.cluster.release(job.placement)
+        best = self.cluster.best_feasible_level(job.n_gpus)
+        for m, c in job.placement.alloc:  # re-take
+            self.cluster.free[m] -= c
+        if best is not None and self.TIER_ORDER[best] < self.TIER_ORDER[cur]:
+            return best
+        return None
+
+    # ------------------------------------------------------------------
+    def _scheduling_round(self, now: float):
+        self.policy.on_round(self, now)
+        # offers in increasing priority value
+        self.waiting.sort(key=lambda j: (self.policy.priority(j, now), j.arrival, j.job_id))
+        made_progress = True
+        preempted = 0
+        while made_progress:
+            made_progress = False
+            for job in list(self.waiting):
+                level = self.policy.on_offer(job, self, now)
+                if level is not None:
+                    self._start(job, level, now)
+                    made_progress = True
+            # network-sensitive preemption: if the most-starved waiting job
+            # cannot be placed at all, evict running jobs whose priority
+            # value exceeds the waiting job's by a margin (hysteresis against
+            # preemption thrash), oldest-runtime-eligible, worst-first
+            if (self.waiting and self.policy.preemption_enabled
+                    and preempted < self.max_preemptions_per_round):
+                top = min(self.waiting,
+                          key=lambda j: (self.policy.priority(j, now),
+                                         j.arrival, j.job_id))
+                if self.cluster.free_gpus() < top.n_gpus:
+                    top_p = self.policy.priority(top, now)
+                    victims = sorted(
+                        (j for j in self.running
+                         if now - j.run_start > self.preemption_min_runtime
+                         and self.policy.priority(j, now) >
+                         top_p + self.policy.preemption_margin),
+                        key=lambda j: -self.policy.priority(j, now))
+                    freed = self.cluster.free_gpus()
+                    for v in victims:
+                        if (freed >= top.n_gpus or
+                                preempted >= self.max_preemptions_per_round):
+                            break
+                        self.preempt(v, now)
+                        preempted += 1
+                        freed += v.n_gpus
+                        made_progress = True
+
+    # ------------------------------------------------------------------
+    def run(self, max_time: float = float("inf")) -> Dict:
+        self._push(0.0, ROUND, None)
+        while self.events:
+            t, kind, _, payload = heapq.heappop(self.events)
+            if t > max_time:
+                break
+            self.clock = t
+            if kind == ARRIVAL:
+                job = self.jobs[payload]
+                job.wait_since = t
+                self.waiting.append(job)
+                self._scheduling_round(t)
+            elif kind == ROUND:
+                if self.waiting:
+                    self._scheduling_round(t)
+                self.timeline.record(
+                    t, self.cluster.total_gpus - self.cluster.free_gpus(),
+                    self.cluster.total_gpus,
+                    len(self.waiting) + len(self.running))
+                if self.waiting or self.running or self.events:
+                    self._push(t + self.round_period, ROUND, None)
+            elif kind == COMPLETE:
+                job_id, version = payload
+                if self._completion_version.get(job_id) != version:
+                    continue  # stale (job was preempted since)
+                job = self.jobs[job_id]
+                self._progress(job, t)
+                job.iters_done = job.total_iters
+                job.finish_time = t
+                self.cluster.release(job.placement)
+                job.placement = None
+                self.running.remove(job)
+                self.finished.append(job)
+                self._scheduling_round(t)
+            elif kind == SLOWDOWN:
+                machine, factor = payload
+                self.machine_slowdown[machine] = factor
+            if not self.events and (self.waiting or self.running):
+                self._push(self.clock + self.round_period, ROUND, None)
+        return self.results()
+
+    # ------------------------------------------------------------------
+    def results(self) -> Dict:
+        from .metrics import summarize
+        return summarize(self.finished, self.timeline)

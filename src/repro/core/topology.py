@@ -1,0 +1,154 @@
+"""Hierarchical cluster topology: racks x machines x GPUs.
+
+GPUs are homogeneous; allocations are tracked as per-machine counts.  A
+placement's *network tier* is the worst interconnect it spans:
+  machine — all GPUs on one machine (NVSwitch / intra-host ICI)
+  rack    — one rack, multiple machines (IB Quantum / pod ICI)
+  network — multiple racks (Spectrum Ethernet / DCN)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+TIERS = ("machine", "rack", "network")
+
+
+@dataclass(frozen=True)
+class Placement:
+    """machine_id -> gpu count (machine_id = rack * machines_per_rack + m)."""
+    alloc: tuple  # tuple of (machine_id, count), sorted
+
+    @property
+    def n_gpus(self) -> int:
+        return sum(c for _, c in self.alloc)
+
+    def machines(self) -> List[int]:
+        return [m for m, _ in self.alloc]
+
+    def tier(self, machines_per_rack: int) -> str:
+        ms = self.machines()
+        if len(ms) == 1:
+            return "machine"
+        racks = {m // machines_per_rack for m in ms}
+        return "rack" if len(racks) == 1 else "network"
+
+
+class ClusterTopology:
+    def __init__(self, n_racks: int, machines_per_rack: int = 8,
+                 gpus_per_machine: int = 8):
+        self.n_racks = n_racks
+        self.machines_per_rack = machines_per_rack
+        self.gpus_per_machine = gpus_per_machine
+        self.n_machines = n_racks * machines_per_rack
+        self.total_gpus = self.n_machines * gpus_per_machine
+        self.free = [gpus_per_machine] * self.n_machines
+
+    # ------------------------------------------------------------------
+    def free_gpus(self) -> int:
+        return sum(self.free)
+
+    def rack_free(self, rack: int) -> int:
+        base = rack * self.machines_per_rack
+        return sum(self.free[base: base + self.machines_per_rack])
+
+    def max_free_on_machine(self) -> int:
+        return max(self.free)
+
+    def max_free_on_rack(self) -> int:
+        return max(self.rack_free(r) for r in range(self.n_racks))
+
+    # ------------------------------------------------------------------
+    def _pack_machines(self, machine_ids: List[int], g: int) -> Optional[list]:
+        """Greedy best-fit: fewest machines (largest free first)."""
+        avail = sorted(((self.free[m], m) for m in machine_ids
+                        if self.free[m] > 0), reverse=True)
+        out, need = [], g
+        for f, m in avail:
+            take = min(f, need)
+            out.append((m, take))
+            need -= take
+            if need == 0:
+                return out
+        return None
+
+    def allocate(self, g: int, level: str) -> Optional[Placement]:
+        """Allocate g GPUs at the given consolidation level (or None).
+
+        machine: all g on one machine;
+        rack: within one rack, fewest machines;
+        network: anywhere, packing racks with most free space first.
+        """
+        if level == "machine":
+            for m in range(self.n_machines):
+                if self.free[m] >= g:
+                    self.free[m] -= g
+                    return Placement(((m, g),))
+            return None
+        if level == "rack":
+            racks = sorted(range(self.n_racks),
+                           key=lambda r: -self.rack_free(r))
+            for r in racks:
+                if self.rack_free(r) < g:
+                    continue
+                base = r * self.machines_per_rack
+                ids = list(range(base, base + self.machines_per_rack))
+                packed = self._pack_machines(ids, g)
+                if packed:
+                    for m, c in packed:
+                        self.free[m] -= c
+                    return Placement(tuple(sorted(packed)))
+            return None
+        if level == "network":
+            if self.free_gpus() < g:
+                return None
+            # fill rack-by-rack (most free first) to stay as consolidated
+            # as possible even at network level
+            packed, need = [], g
+            for r in sorted(range(self.n_racks),
+                            key=lambda rr: -self.rack_free(rr)):
+                base = r * self.machines_per_rack
+                ids = list(range(base, base + self.machines_per_rack))
+                sub = self._pack_machines(ids, min(need, self.rack_free(r)))
+                if sub:
+                    for m, c in sub:
+                        self.free[m] -= c
+                        packed.append((m, c))
+                        need -= c
+                if need == 0:
+                    break
+            assert need == 0
+            return Placement(tuple(sorted(packed)))
+        if level == "scatter":
+            # network-AGNOSTIC allocation: take whatever fragments are free in
+            # machine-index order — the placement a consolidation-blind
+            # scheduler (Gandiva; Tiresias for low-skew jobs) ends up with
+            if self.free_gpus() < g:
+                return None
+            packed, need = [], g
+            for m in range(self.n_machines):
+                if self.free[m] <= 0:
+                    continue
+                take = min(self.free[m], need)
+                self.free[m] -= take
+                packed.append((m, take))
+                need -= take
+                if need == 0:
+                    break
+            assert need == 0
+            return Placement(tuple(sorted(packed)))
+        raise ValueError(level)
+
+    def release(self, placement: Placement):
+        for m, c in placement.alloc:
+            self.free[m] += c
+            assert self.free[m] <= self.gpus_per_machine, "double free"
+
+    def best_feasible_level(self, g: int) -> Optional[str]:
+        if self.max_free_on_machine() >= g:
+            return "machine"
+        if self.max_free_on_rack() >= g:
+            return "rack"
+        if self.free_gpus() >= g:
+            return "network"
+        return None

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for attention: naive full-materialization softmax.
+
+Used only as the ground truth in tests (small shapes); production paths use
+ops.chunked_attention (jnp, memory-bounded) or kernel.py (Pallas TPU).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_reference(q, k, v, *, causal=True, window=None, q_offset=0,
+                        kv_len=None):
+    """Naive attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KH, D) with H % KH == 0 (GQA).
+    ``q_offset``: absolute position of q[0] (decode/continuation).
+    ``window``: sliding-window size (key j visible to query i iff
+                i - window < j <= i), combined with causal.
+    ``kv_len``: number of valid kv positions (rest masked), scalar.
+    Returns (B, Sq, H, D) in q.dtype; softmax in f32.
+    """
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    Dv = v.shape[3]
+    G = H // KH
+    scale = 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32).reshape(B, Sq, KH, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kf) * scale  # (B,Sq,KH,G,Sk)
+
+    qi = q_offset + jnp.arange(Sq)[:, None]
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    if kv_len is not None:
+        mask &= kj < kv_len
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p / denom, vf)
+    return o.reshape(B, Sq, H, Dv).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""jit'd wrapper for the RG-LRU recurrence with backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_scan_kernel
+from .ref import rglru_reference
+
+
+def rglru_scan(a, b, h0=None, *, backend=None, interpret=False,
+               block_t=128, block_w=256):
+    """Run h_t = a_t*h_{t-1} + b_t.  a, b: (B, T, W).  Returns (h, h_last)."""
+    B, T, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        bt = min(block_t, T)
+        bw = min(block_w, W)
+        if T % bt == 0 and W % bw == 0:
+            return rglru_scan_kernel(a, b, h0, block_t=bt, block_w=bw,
+                                     interpret=interpret)
+    return rglru_reference(a, b, h0)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the RG-LRU diagonal linear recurrence.
+
+h_t = a_t * h_{t-1} + b_t   (elementwise over channels)
+
+Gates (a_t, b_t) are computed by the surrounding block; the kernel/ref only
+run the recurrence, which is the sequential hot-spot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_reference(a, b, h0=None):
+    """a, b: (B, T, W); h0: (B, W) initial state.  Returns (h, h_last)."""
+    B, T, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    af = a.astype(jnp.float32).transpose(1, 0, 2)
+    bf = b.astype(jnp.float32).transpose(1, 0, 2)
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), (af, bf))
+    return hs.transpose(1, 0, 2).astype(a.dtype), h_last

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel for the RWKV6 WKV state recurrence.
+
+Grid = (B, H, time_block) with time innermost (sequential); the per-head
+(D x D) state is carried in VMEM scratch across time blocks.  Within a block
+the recurrence unrolls over the time tile: each step is an outer product +
+mat-vec — small MXU/VPU work on resident VMEM tiles, the TPU-native analogue
+of the CUDA per-warp state registers used by the reference GPU kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, slast_ref,
+                state_ref, *, block_t, nt):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)  # (bt, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)        # (D,)
+
+    def step(t, S):
+        kv = k[t][:, None] * v[t][None, :]                 # (D, D)
+        y = jnp.sum(r[t][:, None] * (S + u[:, None] * kv), axis=0)
+        y_ref[0, t, 0, :] = y.astype(y_ref.dtype)
+        return w[t][:, None] * S + kv
+
+    S = jax.lax.fori_loop(0, block_t, step, state_ref[...], unroll=True)
+    state_ref[...] = S
+
+    @pl.when(it == nt - 1)
+    def _final():
+        slast_ref[0, 0] = S.astype(slast_ref.dtype)
+
+
+def rwkv6_wkv_kernel(r, k, v, w, u, s0, *, block_t=64, interpret=False):
+    """r/k/v/w: (B, T, H, D); u: (H, D); s0: (B, H, D, D).  T % block_t == 0."""
+    B, T, H, D = r.shape
+    nt = T // block_t
+    kernel = functools.partial(_wkv_kernel, block_t=block_t, nt=nt)
+    seq_spec = pl.BlockSpec((1, block_t, 1, D), lambda b, h, it: (b, it, h, 0))
+    y, s_last = pl.pallas_call(
+        kernel,
+        grid=(B, H, nt),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, D), lambda b, h, it: (h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, D, D), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, D), r.dtype),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s_last

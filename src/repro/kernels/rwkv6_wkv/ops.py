@@ -1,0 +1,24 @@
+"""jit'd wrapper for the RWKV6 WKV recurrence with backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rwkv6_wkv_kernel
+from .ref import rwkv6_reference
+
+
+def rwkv6_wkv(r, k, v, w, u, s0=None, *, backend=None, interpret=False,
+              block_t=64):
+    """RWKV6 recurrence.  r/k/v/w: (B,T,H,D); u: (H,D).  Returns (y, s_last)."""
+    B, T, H, D = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        bt = min(block_t, T)
+        if T % bt == 0:
+            return rwkv6_wkv_kernel(r, k, v, w, u, s0, block_t=bt,
+                                    interpret=interpret)
+    return rwkv6_reference(r, k, v, w, u, s0)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head with state S in R^{dk x dv}:
+    y_t = r_t^T (S_t + (u * k_t) v_t^T)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+with data-dependent per-channel decay w_t in (0, 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_reference(r, k, v, w, u, s0=None):
+    """r, k, v, w: (B, T, H, D); u: (H, D); s0: (B, H, D, D).
+
+    Returns (y: (B, T, H, D), s_last: (B, H, D, D)).
+    """
+    B, T, H, D = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, D, D), jnp.float32)
+
+    rf, kf, vf, wf = (x.astype(jnp.float32).transpose(1, 0, 2, 3)
+                      for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # (B, H, D) each
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)          # (B,H,D,D)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    s_last, ys = jax.lax.scan(step, s0.astype(jnp.float32), (rf, kf, vf, wf))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), s_last

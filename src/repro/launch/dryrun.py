@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# isort: split  — the two lines above MUST precede any jax-importing module.
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config, get_shape
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim import train_state_specs
+from repro.sharding import make_rules, use_mesh_rules
+from repro.train import (batch_specs, input_specs, make_decode_step,
+                         make_prefill_step, make_train_step, useful_flops)
+from repro.train.steps import ideal_bytes
+from repro.types import TPU_V5E
+
+_IS_SPEC = lambda x: isinstance(x, P)
+
+
+def _sh(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=_IS_SPEC)
+
+
+def _f32_like(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
+                        tree)
+
+
+def lower_cell(cfg, shape, mesh, rules, *, remat="full", ce_chunk=512,
+               donate=True, microbatch=1):
+    """Build (fn, example_args, in_shardings, out_shardings, donate_argnums)
+    for one (arch, shape) cell and lower it on the given mesh."""
+    aparams = lm.abstract_params(cfg, jnp.bfloat16)
+    pspecs = lm.param_specs(cfg, rules)
+    B, S = shape.global_batch, shape.seq_len
+    batch = input_specs(cfg, shape)
+    bspecs = batch_specs(cfg, shape, rules)
+    dp = rules.get("batch")
+
+    if shape.kind == "train":
+        state = {"params": aparams, "master": _f32_like(aparams),
+                 "mu": _f32_like(aparams), "nu": _f32_like(aparams),
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        sspecs = train_state_specs(pspecs, aparams, mesh, rules)
+        fn = make_train_step(cfg, remat=remat, ce_chunk=ce_chunk,
+                             microbatch=microbatch)
+        metrics_specs = {"loss": P(), "tokens": P(), "grad_norm": P()}
+        jitted = jax.jit(
+            fn,
+            in_shardings=(_sh(mesh, sspecs), _sh(mesh, bspecs)),
+            out_shardings=(_sh(mesh, sspecs), _sh(mesh, metrics_specs)),
+            donate_argnums=(0,) if donate else ())
+        return jitted.lower(state, batch)
+
+    if shape.kind == "prefill":
+        cache = lm.abstract_cache(cfg, B, S) if cfg.has_decoder else None
+        cspecs = lm.cache_specs(cfg, B, S, rules) if cfg.has_decoder else None
+        fn = make_prefill_step(cfg)
+        if cfg.has_decoder:
+            logits_spec = P(dp, rules.get("vocab"))
+            out_sh = (NamedSharding(mesh, logits_spec), _sh(mesh, cspecs))
+        else:
+            logits_spec = P(dp, None, rules.get("vocab"))
+            out_sh = (NamedSharding(mesh, logits_spec), None)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(_sh(mesh, pspecs),
+                          _sh(mesh, cspecs) if cspecs is not None else None,
+                          _sh(mesh, bspecs)),
+            out_shardings=out_sh,
+            donate_argnums=(1,) if (donate and cfg.has_decoder) else ())
+        return jitted.lower(aparams, cache, batch)
+
+    # decode: one token against a seq_len-deep cache
+    cache = lm.abstract_cache(cfg, B, S)
+    cspecs = lm.cache_specs(cfg, B, S, rules)
+    fn = make_decode_step(cfg)
+    logits_spec = P(dp, rules.get("vocab"))
+    jitted = jax.jit(
+        fn,
+        in_shardings=(_sh(mesh, pspecs), _sh(mesh, cspecs), _sh(mesh, bspecs)),
+        out_shardings=(NamedSharding(mesh, logits_spec), _sh(mesh, cspecs)),
+        donate_argnums=(1,) if donate else ())
+    return jitted.lower(aparams, cache, batch)
+
+
+def roofline(hlo_totals, cfg, shape, n_chips, profile=TPU_V5E):
+    """Three roofline terms (seconds) from per-device analyzer totals."""
+    compute_s = hlo_totals["flops"] / profile.peak_flops
+    memory_s = hlo_totals["bytes"] / profile.hbm_bw
+    collective_s = hlo_totals["collective_bytes"] / profile.link_bw
+    model_fl = useful_flops(cfg, shape)
+    hlo_total_flops = hlo_totals["flops"] * n_chips
+    tp = 16
+    ideal_b = ideal_bytes(cfg, shape, n_chips=n_chips, tp=tp)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    ideal_s = model_fl / (n_chips * profile.peak_flops)
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": model_fl,
+        "hlo_flops_total": hlo_total_flops,
+        "useful_flop_ratio": (model_fl / hlo_total_flops
+                              if hlo_total_flops else 0.0),
+        "ideal_bytes_per_dev": ideal_b,
+        "ideal_memory_s": ideal_b / profile.hbm_bw,
+        "roofline_fraction": (ideal_s / bound_s) if bound_s else 0.0,
+        "step_lower_bound_s": bound_s,
+    }
+
+
+def run_cell(arch_name, shape_name, multi_pod, *, remat="full", ce_chunk=512,
+             seq_shard=False, save_hlo=None, donate=True, microbatch=1):
+    cfg = get_config(arch_name)
+    shape = get_shape(shape_name)
+    ok, why = applicable(cfg, shape)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_tag,
+           "remat": remat, "seq_shard": seq_shard, "microbatch": microbatch}
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.devices.size
+        rules = make_rules(cfg, mesh, seq_shard=seq_shard,
+                           global_batch=shape.global_batch)
+        t0 = time.time()
+        with mesh, use_mesh_rules(mesh, rules):
+            lowered = lower_cell(cfg, shape, mesh, rules, remat=remat,
+                                 ce_chunk=ce_chunk, donate=donate,
+                                 microbatch=microbatch)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        hlo = analyze(txt, n_devices=n_chips)
+        if save_hlo:
+            pathlib.Path(save_hlo).write_text(txt)
+        per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                         + mem.generated_code_size_in_bytes)
+        rec.update(
+            status="ok",
+            n_chips=n_chips,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_bytes": per_dev_bytes,
+                "fits_hbm": bool(per_dev_bytes < TPU_V5E.hbm_per_chip),
+            },
+            xla_cost={"flops": cost.get("flops"),
+                      "bytes_accessed": cost.get("bytes accessed")},
+            hlo=hlo,
+            roofline=roofline(hlo, cfg, shape, n_chips),
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash the matrix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--ce-chunk", type=int, default=512)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [True, False] if args.both_meshes else [args.multi_pod]
+
+    outdir = pathlib.Path(args.out) / args.tag
+    outdir.mkdir(parents=True, exist_ok=True)
+    for a, s in cells:
+        for mp in meshes:
+            rec = run_cell(a, s, mp, remat=args.remat, ce_chunk=args.ce_chunk,
+                           seq_shard=args.seq_shard, save_hlo=args.save_hlo,
+                           donate=not args.no_donate,
+                           microbatch=args.microbatch)
+            tag = "pod2x16x16" if mp else "pod16x16"
+            path = outdir / f"{a}__{s}__{tag}.json"
+            path.write_text(json.dumps(rec, indent=1))
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" dom={r['dominant']} frac={r['roofline_fraction']:.3f}"
+                         f" fit={rec['memory']['fits_hbm']}"
+                         f" compile={rec['compile_s']}s")
+            elif status == "error":
+                extra = " " + rec["error"][:160]
+            else:
+                extra = " " + rec["reason"]
+            print(f"[{status:5s}] {a} × {s} × {tag}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,460 @@
+"""Trip-count-aware analysis of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits while-loop bodies ONCE, so for scanned
+models it undercounts FLOPs/bytes/collectives by the trip count (verified
+empirically in this container).  This module re-derives the three roofline
+inputs from ``compiled.as_text()`` with loop multipliers:
+
+* flops            — 2 * prod(out) * prod(contracting dims) per dot
+* bytes            — sum of (operand + output) bytes over memory-touching ops
+                     at fusion granularity (a fusion's internals are free)
+* collective bytes — operand bytes of all-reduce / all-gather /
+                     reduce-scatter / all-to-all / collective-permute,
+                     bucketed by participant-group size
+
+All numbers are per-device (the compiled module is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[^\s=]+)\s*=\s*(?P<type>\([^)]*\)|\S+)\s+"
+    r"(?P<opcode>[a-z0-9_-]+)\((?P<args>.*)$")
+_COMP_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?(?P<name>[^\s(]+)\s+\((?P<params>.*)\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([^\s,)]+)")
+_BODY_RE = re.compile(r"body=%?([^\s,)]+)")
+_COND_RE = re.compile(r"condition=%?([^\s,)]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([^\]]*)\](T\([^)]*\))?")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Op kinds whose operand/output bytes count as HBM traffic.  Deliberately
+# fusion-boundary granularity: standalone elementwise ops are EXCLUDED because
+# the TPU backend fuses them into neighbouring fusions/reductions — counting
+# them individually on the (less aggressively fused) CPU dump overstates the
+# memory term ~5-10x (verified against napkin math on train_4k).
+_MEM_OPS = {
+    "dot", "convolution", "fusion", "custom-call", "copy", "reduce",
+    "reduce-window", "dynamic-slice", "dynamic-update-slice", "gather",
+    "scatter", "pad", "slice", "concatenate", "sort", "select-and-scatter",
+    "rng", "transpose",
+} | set(COLLECTIVES) | {c + "-start" for c in COLLECTIVES}
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    param_types: Dict[str, str]
+    ops: List[Op] = field(default_factory=list)
+
+
+def _split_depth0(s: str) -> List[str]:
+    """Split on commas at paren-depth 0 (tuple-typed params nest parens)."""
+    parts, buf, depth = [], [], 0
+    for ch in s:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    if buf:
+        parts.append("".join(buf))
+    return parts
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not raw.startswith((" ", "\t")) and ("->" in line) and "{" in line:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                params = {}
+                for part in _split_depth0(m.group("params")):
+                    part = part.strip()
+                    if not part or ":" not in part:
+                        continue
+                    pname, ptype = part.split(":", 1)
+                    params[pname.strip().lstrip("%")] = ptype.strip()
+                cur = Computation(m.group("name"), params)
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(m.group("name"), m.group("type"),
+                              m.group("opcode"), line))
+    return comps
+
+
+def _operand_names(op: Op) -> List[str]:
+    # take the text after "opcode(" up to the matching close; operands are
+    # %name tokens (shapes are not inlined in modern HLO dumps)
+    args = op.line.split(op.opcode + "(", 1)[1]
+    names = []
+    depth = 1
+    buf = []
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    for tok in "".join(buf).split(","):
+        tok = tok.strip()
+        if tok.startswith("%"):
+            names.append(tok.lstrip("%"))
+        elif re.match(r"^[a-zA-Z_][\w.\-]*$", tok):
+            names.append(tok)
+    return names
+
+
+def _group_info(line: str, n_devices: int) -> Tuple[int, str]:
+    """Return (group_size, layout_hint) for a collective op line."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        hint = "strided" if m.group(4) else "contiguous"
+        return group_size, hint
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(",")), "explicit"
+    return n_devices, "all"
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    collective_by_group: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    dots: int = 0
+    unknown_trip_whiles: int = 0
+    bytes_by_opcode: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    top_ops: List = field(default_factory=list)
+
+    def as_dict(self, breakdown=False):
+        d = {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": dict(self.collectives),
+            "collective_by_group": dict(self.collective_by_group),
+            "dots": self.dots,
+            "unknown_trip_whiles": self.unknown_trip_whiles,
+        }
+        if breakdown:
+            d["bytes_by_opcode"] = dict(self.bytes_by_opcode)
+            d["top_ops"] = sorted(self.top_ops, reverse=True)[:20]
+        return d
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out = _shape_dims(op.type_str)
+    operands = _operand_names(op)
+    if not operands:
+        return 0.0
+    lhs_type = shapes.get(operands[0], "")
+    lhs = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    contract = 1
+    if m and m.group(1) and lhs:
+        for d in m.group(1).split(","):
+            i = int(d)
+            if i < len(lhs):
+                contract *= lhs[i]
+    n_out = 1
+    for d in out:
+        n_out *= d
+    return 2.0 * n_out * contract
+
+
+def _fusion_dot_flops(comp: Computation, shapes_cache, comps) -> float:
+    """Dots inside a fusion body still count as flops (bytes stay at the
+    fusion boundary)."""
+    shapes = shapes_cache(comp)
+    total = 0.0
+    for op in comp.ops:
+        if op.opcode == "dot":
+            total += _dot_flops(op, shapes)
+        elif op.opcode == "fusion":
+            m = _CALLS_RE.search(op.line)
+            if m and m.group(1) in comps:
+                total += _fusion_dot_flops(comps[m.group(1)], shapes_cache, comps)
+    return total
+
+
+_SLICE_OPS = {"dynamic-slice", "gather"}
+
+
+def _fusion_charges(comp: Computation, shapes_cache):
+    """Byte-charge model for a fusion body.
+
+    Returns (out_bytes_override, {param_index: bytes}).
+
+    * A parameter consumed ONLY by dynamic-slice/gather (as the sliced
+      operand) costs the slice outputs, not the whole buffer.
+    * If the fusion ROOT is a dynamic-update-slice, the fusion writes one
+      slice in place: output charge = update bytes, and the passed-through
+      buffer parameter costs nothing.  (Without this, scan residual stacks
+      get charged at full size once per scan step — trip-count x overcount.)
+    """
+    shapes = shapes_cache(comp)
+    param_of = {}
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", op.line)
+            if m:
+                param_of[op.name] = int(m.group(1))
+    usage: Dict[int, List] = defaultdict(list)
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            continue
+        for i, name in enumerate(_operand_names(op)):
+            if name in param_of:
+                usage[param_of[name]].append((op, i))
+    charges = {}
+    for idx, uses in usage.items():
+        if uses and all(o.opcode in _SLICE_OPS and i == 0 for o, i in uses):
+            charges[idx] = sum(_type_bytes(o.type_str) for o, _ in uses)
+
+    out_override = None
+    by_name = {op.name: op for op in comp.ops}
+    root = None
+    for op in comp.ops:
+        if op.line.lstrip().startswith("ROOT"):
+            root = op
+    if root is None and comp.ops:
+        root = comp.ops[-1]
+
+    def unwrap(op):
+        seen = 0
+        while op is not None and op.opcode in ("convert", "bitcast", "copy") \
+                and seen < 8:
+            srcs = _operand_names(op)
+            op = by_name.get(srcs[0]) if srcs else None
+            seen += 1
+        return op
+
+    r = unwrap(root)
+    if r is not None and r.opcode == "dynamic-update-slice":
+        operands = _operand_names(r)
+        if len(operands) > 1:
+            upd = shapes.get(operands[1], "")
+            out_override = _type_bytes(upd) if upd else None
+            # zero-charge the passed-through buffer param (walk convert chains)
+            buf_op = by_name.get(operands[0])
+            name = operands[0]
+            seen = 0
+            while seen < 8:
+                if name in param_of:
+                    charges[param_of[name]] = 0.0
+                    break
+                if buf_op is None or buf_op.opcode not in ("convert", "bitcast",
+                                                           "copy"):
+                    break
+                srcs = _operand_names(buf_op)
+                if not srcs:
+                    break
+                name = srcs[0]
+                buf_op = by_name.get(name)
+                seen += 1
+    return out_override, charges
+
+
+def analyze(text: str, n_devices: int = 1, breakdown: bool = False) -> Dict:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group("name")
+            break
+    if entry is None or entry not in comps:
+        # fall back: last computation
+        entry = list(comps)[-1]
+
+    shape_tables: Dict[str, Dict[str, str]] = {}
+
+    def shapes_of(comp: Computation) -> Dict[str, str]:
+        if comp.name not in shape_tables:
+            table = dict(comp.param_types)
+            for op in comp.ops:
+                table[op.name] = op.type_str
+            shape_tables[comp.name] = table
+        return shape_tables[comp.name]
+
+    totals = Totals()
+
+    def visit(comp_name: str, mult: float):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        shapes = shapes_of(comp)
+        # Value-granular byte model: each HLO value costs one write when
+        # produced and at most one read regardless of consumer count (perfect
+        # producer->consumer streaming — the TPU backend fuses elementwise
+        # chains, so per-consumer charging on the shallowly-fused CPU dump
+        # would overstate HBM traffic several-fold).
+        writes: Dict[str, float] = {}
+        reads: Dict[str, float] = {}
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                trip = 1
+                m = _TRIP_RE.search(op.line)
+                if m:
+                    trip = int(m.group(1))
+                else:
+                    totals.unknown_trip_whiles += 1
+                b = _BODY_RE.search(op.line)
+                c = _COND_RE.search(op.line)
+                if b:
+                    visit(b.group(1), mult * trip)
+                if c:
+                    visit(c.group(1), mult * trip)
+                continue
+            if oc in ("call", "async-start"):
+                m = _CALLS_RE.search(op.line) or re.search(
+                    r"to_apply=%?([^\s,)]+)", op.line)
+                if m:
+                    visit(m.group(1), mult)
+                continue
+            if oc == "conditional":
+                for m in re.finditer(r"(?:true|false)_computation=%?([^\s,)]+)",
+                                     op.line):
+                    visit(m.group(1), mult)
+                for m in re.finditer(r"branch_computations=\{([^}]*)\}", op.line):
+                    for b in m.group(1).split(","):
+                        visit(b.strip().lstrip("%"), mult)
+                continue
+
+            base = oc.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not oc.endswith("-done"):
+                opb = sum(_type_bytes(shapes.get(n, ""))
+                          for n in _operand_names(op))
+                totals.collective_bytes += mult * opb
+                totals.collectives[base] += mult * opb
+                gsize, hint = _group_info(op.line, n_devices)
+                totals.collective_by_group[f"{base}@{gsize}:{hint}"] += mult * opb
+
+            fusion_charges = None
+            fusion_out_override = None
+            if oc == "dot":
+                f = _dot_flops(op, shapes)
+                totals.flops += mult * f
+                totals.dots += 1
+            elif oc == "fusion":
+                m = _CALLS_RE.search(op.line)
+                if m and m.group(1) in comps:
+                    fused = comps[m.group(1)]
+                    totals.flops += mult * _fusion_dot_flops(
+                        fused, shapes_of, comps)
+                    fusion_out_override, fusion_charges = _fusion_charges(
+                        fused, shapes_of)
+
+            if oc in _MEM_OPS:
+                ob = _type_bytes(op.type_str)
+                operands = _operand_names(op)
+
+                def note_read(name, nbytes):
+                    reads[name] = max(reads.get(name, 0.0), nbytes)
+
+                if oc in ("dynamic-slice", "gather"):
+                    # read slice-size of the buffer, not the whole buffer
+                    if operands:
+                        note_read(operands[0], ob)
+                elif oc == "dynamic-update-slice":
+                    # in-place: read + write only the update (operand 1)
+                    upd = (_type_bytes(shapes.get(operands[1], ""))
+                           if len(operands) > 1 else ob)
+                    ob = upd
+                    if len(operands) > 1:
+                        note_read(operands[1], upd)
+                elif oc == "scatter":
+                    upd = sum(_type_bytes(shapes.get(n, ""))
+                              for n in operands[2:])
+                    ob = upd
+                    for n in operands[2:]:
+                        note_read(n, _type_bytes(shapes.get(n, "")))
+                elif fusion_charges is not None:
+                    if fusion_out_override is not None:
+                        ob = fusion_out_override
+                    for i, n in enumerate(operands):
+                        note_read(n, fusion_charges.get(
+                            i, _type_bytes(shapes.get(n, ""))))
+                else:
+                    for n in operands:
+                        note_read(n, _type_bytes(shapes.get(n, "")))
+                writes[op.name] = ob
+                totals.bytes_by_opcode[oc] += mult * ob
+                if mult * ob > 10e9:
+                    totals.top_ops.append((mult * ob, mult, op.line[:160]))
+
+        body_bytes = sum(writes.values()) + sum(reads.values())
+        totals.bytes += mult * body_bytes
+
+    visit(entry, 1.0)
+    return totals.as_dict(breakdown=breakdown)

@@ -1,0 +1,10 @@
+from .lm import (  # noqa: F401
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_specs,
+    prefill,
+)

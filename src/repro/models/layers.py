@@ -1,0 +1,96 @@
+"""Shared primitive layers: norms, rope, MLPs, chunked CE loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+def rms_norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """Rotary embedding.  x: (..., S, H, D) with positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _act(kind, g, u):
+    if kind == "swiglu":
+        return jax.nn.silu(g) * u
+    if kind == "geglu":
+        return jax.nn.gelu(g) * u
+    if kind == "gelu":
+        return jax.nn.gelu(u)
+    if kind == "relu2":
+        r = jax.nn.relu(u)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp_apply(p, x, kind):
+    """Gated / plain MLP.  p: {wg?, wu, wo}."""
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"]) if "wg" in p else None
+    h = _act(kind, g, u)
+    h = constrain(h, "batch", "seq", "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def chunked_ce_loss(x, head_w, labels, *, chunk=512, label_mask=None):
+    """Cross-entropy over a large (sharded) vocab without materializing the
+    full f32 logits: lax.scan over sequence chunks.
+
+    x: (B, S, D) final hidden; head_w: (D, V); labels: (B, S) int32.
+    Returns (mean_loss, token_count).
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        if label_mask is not None:
+            label_mask = jnp.pad(label_mask, ((0, 0), (0, pad)))
+    Sp = S + pad
+    n = Sp // chunk
+    xs = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    if label_mask is None:
+        ms = (ls >= 0)
+    else:
+        ms = jnp.logical_and(
+            label_mask.reshape(B, n, chunk).transpose(1, 0, 2), ls >= 0)
+
+    # remat: recompute the (B, chunk, V) logits in the backward pass instead
+    # of saving one f32 logits buffer per scan step (the fused-softmax-CE trick)
+    @jax.checkpoint
+    def body(carry, xs_):
+        tot, cnt = carry
+        xc, lc, mc = xs_
+        logits = jnp.einsum("bsd,dv->bsv", xc, head_w,
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        lab = jnp.clip(lc, 0, logits.shape[-1] - 1)
+        picked = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mc, lse - picked, 0.0)
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1), cnt

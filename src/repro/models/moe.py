@@ -1,0 +1,107 @@
+"""Mixture-of-Experts layer: top-k router + sort/gather grouped-GEMM dispatch.
+
+The dispatch is capacity-based: token copies are sorted by expert id, each
+expert takes up to C = ceil(cf * T * k / E) copies (overflow dropped — the
+standard GShard/Switch contract).  Expert weights shard over the "model" mesh
+axis (expert parallelism); under GSPMD the gather from data-sharded tokens
+into the (E, C, D) expert layout lowers to the dispatch collective.  With high
+capacity_factor the layer is exactly equal to a dense per-token evaluation
+(tests assert this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+from .layers import _act, mlp_apply, rms_norm
+
+
+def _router(y, p, moe):
+    logits = jnp.einsum("bsd,de->bse", y.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    e_pad = p["router"].shape[-1]
+    if e_pad != moe.n_experts:
+        # padded experts are unreachable: -inf logits => probability 0
+        emask = jnp.arange(e_pad) < moe.n_experts
+        logits = jnp.where(emask[None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, moe.top_k)       # (B,S,k)
+    if moe.router_norm_topk:
+        gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def moe_block(p, x, *, cfg):
+    """MoE residual branch (pre-norm).  x: (B, S, D)."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.padded_experts, moe.top_k
+    # capacity per expert scales with the LOGICAL expert count: tokens only
+    # ever route to the real n_experts (padded ones have -inf router logits)
+    C = max(4, int(-(-moe.capacity_factor * T * K // moe.n_experts)))
+
+    y = rms_norm(x, p["ln2"])
+    gates, idx, _ = _router(y, p, moe)
+
+    yf = y.reshape(T, D)
+    flat_e = idx.reshape(T * K)                        # expert id per copy
+    flat_g = gates.reshape(T * K)
+    order = jnp.argsort(flat_e)                        # stable
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos = jnp.arange(T * K) - seg_start[sorted_e]      # rank within expert
+    keep = pos < C
+    dest = jnp.where(keep, sorted_e * C + pos, E * C)  # E*C = drop bucket
+
+    # (E*C,) buffer of source token ids; T = padded "no token" row
+    buf_tok = jnp.full((E * C,), T, jnp.int32)
+    buf_tok = buf_tok.at[dest].set((order // K).astype(jnp.int32), mode="drop")
+    buf_gate = jnp.zeros((E * C,), flat_g.dtype)
+    buf_gate = buf_gate.at[dest].set(flat_g[order], mode="drop")
+
+    y_pad = jnp.concatenate([yf, jnp.zeros((1, D), yf.dtype)], axis=0)
+    xg = y_pad[buf_tok].reshape(E, C, D)
+    xg = constrain(xg, "experts", "capacity", "embed")
+
+    u = jnp.einsum("ecd,edf->ecf", xg, p["we_u"])
+    g = jnp.einsum("ecd,edf->ecf", xg, p["we_g"]) if "we_g" in p else None
+    h = _act(cfg.mlp_kind, g, u)
+    h = constrain(h, "experts", "capacity", "expert_ffn")
+    eo = jnp.einsum("ecf,efd->ecd", h, p["we_o"]).reshape(E * C, D)
+
+    out = jnp.zeros((T + 1, D), eo.dtype)
+    out = out.at[buf_tok].add(eo * buf_gate[:, None].astype(eo.dtype))
+    out = out[:T].reshape(B, S, D)
+    out = constrain(out, "batch", "seq", "embed")
+
+    if moe.n_shared:
+        sh = mlp_apply({"wg": p["sh_wg"], "wu": p["sh_wu"], "wo": p["sh_wo"]},
+                       y, cfg.mlp_kind)
+        sg = jax.nn.sigmoid(jnp.einsum("bsd,d->bs", y.astype(jnp.float32),
+                                       p["sh_gate"].astype(jnp.float32)))
+        out = out + sh * sg[..., None].astype(sh.dtype)
+    return x + out
+
+
+def moe_block_dense_reference(p, x, *, cfg):
+    """O(E) dense oracle: evaluate every expert on every token (tests only)."""
+    moe = cfg.moe
+    y = rms_norm(x, p["ln2"])
+    gates, idx, _ = _router(y, p, moe)
+    u = jnp.einsum("bsd,edf->bsef", y, p["we_u"])
+    g = jnp.einsum("bsd,edf->bsef", y, p["we_g"]) if "we_g" in p else None
+    h = _act(cfg.mlp_kind, g, u) if cfg._gated else _act(cfg.mlp_kind, None, u)
+    eo = jnp.einsum("bsef,efd->bsed", h, p["we_o"])
+    e_pad = p["we_o"].shape[0]
+    onehot = jax.nn.one_hot(idx, e_pad, dtype=eo.dtype)  # (B,S,k,E_pad)
+    w = jnp.einsum("bske,bsk->bse", onehot, gates.astype(eo.dtype))
+    out = jnp.einsum("bsed,bse->bsd", eo, w)
+    if moe.n_shared:
+        sh = mlp_apply({"wg": p["sh_wg"], "wu": p["sh_wu"], "wo": p["sh_wo"]},
+                       y, cfg.mlp_kind)
+        sg = jax.nn.sigmoid(jnp.einsum("bsd,d->bs", y.astype(jnp.float32),
+                                       p["sh_gate"].astype(jnp.float32)))
+        out = out + sh * sg[..., None].astype(sh.dtype)
+    return x + out

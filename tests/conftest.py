@@ -1,0 +1,9 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets its own 512-device flag
+# in a separate process); keep any ambient XLA_FLAGS from leaking in.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

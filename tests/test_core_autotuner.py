@@ -1,0 +1,53 @@
+"""Auto-tuner (Algo 2) math and window semantics."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.autotuner import AutoTuner
+
+
+def test_defaults_when_empty():
+    t = AutoTuner(default_machine=100.0, default_rack=200.0)
+    assert t.get_tuned_timers(8, now=0.0) == (100.0, 200.0)
+
+
+def test_mean_plus_two_std():
+    t = AutoTuner()
+    xs = [10.0, 20.0, 30.0]
+    for x in xs:
+        t.update_demand_delay("machine", x, 8, now=0.0)
+    mc, _ = t.get_tuned_timers(8, now=1.0)
+    mean = 20.0
+    std = math.sqrt(sum((x - mean) ** 2 for x in xs) / 2)
+    assert abs(mc - (mean + 2 * std)) < 1e-9
+
+
+def test_sliding_window_expires_old_entries():
+    t = AutoTuner(history_time_limit=100.0, default_machine=7.0)
+    t.update_demand_delay("machine", 50.0, 8, now=0.0)
+    mc, _ = t.get_tuned_timers(8, now=50.0)
+    assert mc == 50.0  # single entry: mean + 2*0
+    mc, _ = t.get_tuned_timers(8, now=500.0)  # entry aged out
+    assert mc == 7.0
+
+
+def test_cross_demand_fallback():
+    """A demand bucket with no history borrows the tier-wide history."""
+    t = AutoTuner(default_machine=999.0)
+    t.update_demand_delay("machine", 10.0, 8, now=0.0)
+    mc, _ = t.get_tuned_timers(64, now=1.0)  # g=64 never observed
+    assert mc == 10.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(0.0, 1e5), min_size=1, max_size=50))
+def test_timer_bounds_property(xs):
+    """mean <= timer <= mean + 2*range (never NaN/negative)."""
+    t = AutoTuner()
+    for x in xs:
+        t.update_demand_delay("rack", x, 4, now=0.0)
+    _, rk = t.get_tuned_timers(4, now=1.0)
+    mean = sum(xs) / len(xs)
+    assert rk >= mean - 1e-6
+    assert rk <= mean + 2 * (max(xs) - min(xs)) + 1e-6
+    assert not math.isnan(rk)

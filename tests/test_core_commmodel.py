@@ -1,0 +1,59 @@
+"""Communication-model properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core.commmodel import CommModel
+from repro.core.topology import Placement
+
+ARCHS_L = list(ARCHS.values())
+COMM = CommModel.from_configs(ARCHS_L)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_tier_monotonicity(name):
+    """machine <= rack <= network latency, for every model (paper Fig. 1)."""
+    s = COMM.sensitivity_pct(name, 0.3, 8)
+    assert s["machine"] <= s["rack"] <= s["network"]
+
+
+def test_moe_more_sensitive_than_dense():
+    """MoE syncs all experts but computes top-k: higher comm/compute ratio
+    at equal compute time (the skew-vs-sensitivity divergence of Table I)."""
+    s_moe = COMM.sensitivity_pct("qwen3-moe-30b-a3b", 0.3, 8)
+    s_dense = COMM.sensitivity_pct("yi-9b", 0.3, 8)
+    assert s_moe["network"] > 3 * s_dense["network"]
+
+
+@settings(max_examples=30, deadline=None)
+@given(g=st.integers(2, 64), name=st.sampled_from(sorted(ARCHS)))
+def test_exposed_comm_nonnegative_and_iteration_consistent(g, name):
+    per = max(1, g // 2)
+    pl = Placement(((0, per), (9, g - per)))  # spans racks
+    it, exposed = COMM.iteration_time(name, 0.25, pl, 8, 8)
+    assert exposed >= 0.0
+    assert it >= 0.25
+    assert abs(it - (0.25 + exposed)) < 1e-9
+
+
+def test_bigger_gradient_higher_latency():
+    pl = Placement(((0, 4), (1, 4)))
+    a = COMM.allreduce_time("qwen3-1.7b", pl, 8, 8)   # 1.7B params
+    b = COMM.allreduce_time("pixtral-12b", pl, 8, 8)  # 12B params
+    assert b > a
+
+
+def test_calibration_scales_bandwidth_term():
+    """Calibration multiplies gradient *bytes*; the per-hop latency term is
+    unchanged, so the bandwidth-dominated total roughly doubles."""
+    import dataclasses
+    from repro.types import TPU_V5E, NetworkTier
+    no_lat = dataclasses.replace(
+        TPU_V5E, tiers=tuple(NetworkTier(t.name, t.bandwidth, 0.0)
+                             for t in TPU_V5E.tiers))
+    base = CommModel.from_configs(ARCHS_L, profile=no_lat)
+    cal = CommModel.from_configs(ARCHS_L, profile=no_lat,
+                                 calibration={"yi-9b": 2.0})
+    pl = Placement(((0, 8),))
+    assert (cal.allreduce_time("yi-9b", pl, 8, 8)
+            == pytest.approx(2.0 * base.allreduce_time("yi-9b", pl, 8, 8)))

@@ -1,0 +1,103 @@
+"""Policy decision tables: Algo 1 acceptance logic, variants, Tiresias skew."""
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import ClusterSimulator, ClusterTopology, CommModel
+from repro.core.job import Job
+from repro.core.policies import make_policy
+
+COMM = CommModel.from_configs(list(ARCHS.values()))
+
+
+def _sim(racks=1):
+    return ClusterSimulator(ClusterTopology(n_racks=racks),
+                            make_policy("dally"), COMM)
+
+
+def _job(g=8, arrival=0.0):
+    return Job(job_id=0, model="yi-9b", n_gpus=g, total_iters=100,
+               compute_time_per_iter=0.3, arrival=arrival)
+
+
+def test_algo1_accepts_machine_when_available():
+    sim = _sim()
+    pol = make_policy("dally")
+    job = _job(g=8)
+    assert pol.on_offer(job, sim, now=0.0) == "machine"
+
+
+def test_algo1_rejects_rack_until_timer_elapses():
+    sim = _sim()
+    pol = make_policy("dally-manual", machine_timer=100.0, rack_timer=100.0)
+    job = _job(g=8)
+    # fill every machine partially so no single machine has 8 free
+    for m in range(sim.cluster.n_machines):
+        sim.cluster.free[m] = 4
+    assert pol.on_offer(job, sim, now=50.0) is None          # timer pending
+    assert pol.on_offer(job, sim, now=150.0) == "rack"        # elapsed
+
+
+def test_algo1_network_after_both_timers():
+    sim = _sim(racks=2)
+    pol = make_policy("dally-manual", machine_timer=10.0, rack_timer=20.0)
+    job = _job(g=8)
+    # 4 GPUs free in each rack: no machine fits 8, no single rack fits 8,
+    # but the cluster total (8) does
+    for m in range(sim.cluster.n_machines):
+        sim.cluster.free[m] = 0
+    sim.cluster.free[0] = 4       # rack 0
+    sim.cluster.free[8] = 4       # rack 1
+    assert pol.on_offer(job, sim, now=5.0) is None    # machine timer pending
+    assert pol.on_offer(job, sim, now=15.0) is None   # rack timer pending
+    assert pol.on_offer(job, sim, now=35.0) == "network"
+
+
+def test_algo1_timers_zero_for_oversized_jobs():
+    sim = _sim()
+    pol = make_policy("dally")
+    t_mc, t_rk = pol._timers(_job(g=16), sim, now=0.0)
+    assert t_mc == 0.0 and t_rk > 0.0       # can't fit one machine
+    t_mc, t_rk = pol._timers(_job(g=128), sim, now=0.0)
+    assert t_mc == 0.0 and t_rk == 0.0      # can't fit one rack
+
+
+def test_nowait_accepts_best_available_immediately():
+    sim = _sim()
+    pol = make_policy("dally-nowait")
+    for m in range(sim.cluster.n_machines):
+        sim.cluster.free[m] = 4
+    assert pol.on_offer(_job(g=8), sim, now=0.0) == "rack"
+
+
+def test_fully_consolidated_waits_forever():
+    sim = _sim()
+    pol = make_policy("dally-fullyconsolidated")
+    for m in range(sim.cluster.n_machines):
+        sim.cluster.free[m] = 4
+    assert pol.on_offer(_job(g=8), sim, now=1e9) is None
+
+
+def test_tiresias_skew_consolidates():
+    sim = _sim()
+    pol = make_policy("tiresias", skew_threshold=0.15)
+    hi = _job(g=8); hi.skew = 0.3
+    lo = _job(g=8); lo.skew = 0.01
+    for m in range(sim.cluster.n_machines):
+        sim.cluster.free[m] = 4
+    assert pol.on_offer(hi, sim, now=0.0) is None      # waits for machine
+    assert pol.on_offer(lo, sim, now=0.0) == "scatter"  # takes fragments
+
+
+def test_nw_sens_ordering():
+    """A job slowed by the network ranks before one running at full speed."""
+    fast = _job(); fast.t_run = 100.0; fast.iters_done = 300
+    fast.total_iters = 1000; fast.compute_time_per_iter = 0.3
+    slow = _job(); slow.t_run = 100.0; slow.iters_done = 60
+    slow.total_iters = 1000; slow.compute_time_per_iter = 0.3
+    assert slow.nw_sens() < fast.nw_sens()
+
+
+def test_two_das_is_service_times_gpus():
+    j = _job(g=4)
+    j.t_run = 50.0
+    assert j.two_das() == 200.0

@@ -1,0 +1,97 @@
+"""End-to-end simulator behaviour (system tests for the paper's scheduler)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
+                        make_batch_trace, make_poisson_trace)
+from repro.core.policies import POLICIES, make_policy
+
+ARCHS_L = list(ARCHS.values())
+COMM = CommModel.from_configs(ARCHS_L)
+
+
+def _run(policy_name, n_jobs=60, racks=2, seed=3, trace="batch", **sim_kw):
+    mk = make_batch_trace if trace == "batch" else make_poisson_trace
+    jobs = mk(ARCHS_L, n_jobs=n_jobs, seed=seed)
+    sim = ClusterSimulator(ClusterTopology(n_racks=racks),
+                           make_policy(policy_name), COMM, **sim_kw)
+    for j in jobs:
+        sim.submit(j)
+    res = sim.run()
+    return sim, res
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_all_jobs_complete(policy):
+    sim, res = _run(policy)
+    assert res["n_finished"] == 60
+    for j in sim.finished:
+        assert j.iters_done == j.total_iters
+        assert j.finish_time >= j.arrival
+        assert j.t_queue >= 0 and j.t_run >= 0 and j.comm_time >= 0
+    # every GPU returned
+    assert sim.cluster.free_gpus() == sim.cluster.total_gpus
+
+
+@pytest.mark.parametrize("policy", ["dally", "tiresias"])
+def test_determinism(policy):
+    _, a = _run(policy, seed=5)
+    _, b = _run(policy, seed=5)
+    assert a["makespan"] == b["makespan"]
+    assert a["jct"]["avg"] == b["jct"]["avg"]
+
+
+def test_jct_at_least_ideal():
+    sim, _ = _run("dally")
+    for j in sim.finished:
+        ideal = j.total_iters * j.compute_time_per_iter
+        assert j.finish_time - j.arrival >= 0.99 * ideal
+
+
+def test_makespan_at_least_workload_bound():
+    sim, res = _run("dally", n_jobs=80, racks=1)
+    total_gpu_seconds = sum(j.total_iters * j.compute_time_per_iter * j.n_gpus
+                            for j in sim.finished)
+    assert res["makespan"] >= total_gpu_seconds / sim.cluster.total_gpus
+
+
+def test_delay_scheduling_reduces_comm_vs_nowait():
+    """Dally's whole premise: waiting (+ upgrades) lowers exposed comm."""
+    _, dally = _run("dally", n_jobs=100, racks=2, seed=11)
+    _, nowait = _run("dally-nowait", n_jobs=100, racks=2, seed=11)
+    assert dally["comm_latency"]["avg"] <= nowait["comm_latency"]["avg"]
+
+
+def test_straggler_slowdown_affects_placed_jobs():
+    """Machine-slowdown events stretch iteration times of jobs placed there;
+    the run still completes (scheduler-level straggler tolerance)."""
+    jobs = make_batch_trace(ARCHS_L, n_jobs=40, seed=9)
+    sim = ClusterSimulator(
+        ClusterTopology(n_racks=1), make_policy("dally"), COMM,
+        slowdown_events=[(0.0, m, 3.0) for m in range(4)])
+    for j in jobs:
+        sim.submit(j)
+    res = sim.run()
+    assert res["n_finished"] == 40
+
+
+def test_preemption_resumes_progress():
+    sim, res = _run("dally", n_jobs=80, racks=1)
+    preempted = [j for j in sim.finished if j.preemptions > 0]
+    assert preempted, "expected preemptions under congestion"
+    for j in preempted:
+        assert j.iters_done == j.total_iters  # nothing lost
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100), racks=st.sampled_from([1, 2]))
+def test_capacity_never_oversubscribed_property(seed, racks):
+    jobs = make_batch_trace(ARCHS_L, n_jobs=30, seed=seed)
+    cl = ClusterTopology(n_racks=racks)
+    sim = ClusterSimulator(cl, make_policy("dally"), COMM)
+    for j in jobs:
+        sim.submit(j)
+    sim.run()
+    assert cl.free_gpus() == cl.total_gpus
+    assert all(0 <= f <= cl.gpus_per_machine for f in cl.free)

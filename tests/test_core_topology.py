@@ -1,0 +1,67 @@
+"""Cluster topology invariants (hypothesis)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import ClusterTopology, Placement
+
+
+def test_tier_classification():
+    assert Placement(((0, 8),)).tier(8) == "machine"
+    assert Placement(((0, 4), (1, 4))).tier(8) == "rack"
+    assert Placement(((0, 4), (8, 4))).tier(8) == "network"
+
+
+def test_allocate_levels():
+    cl = ClusterTopology(n_racks=2)
+    p = cl.allocate(8, "machine")
+    assert p.tier(8) == "machine" and cl.free_gpus() == 120
+    p2 = cl.allocate(16, "rack")
+    assert p2.tier(8) in ("machine", "rack")
+    cl.release(p)
+    cl.release(p2)
+    assert cl.free_gpus() == 128
+
+
+def test_scatter_is_fragment_order():
+    cl = ClusterTopology(n_racks=2)
+    # occupy parts of the first machines to force fragmentation
+    a = cl.allocate(6, "machine")
+    b = cl.allocate(6, "machine")
+    p = cl.allocate(6, "scatter")
+    assert len(p.machines()) >= 2  # fragments, not one machine
+    cl.release(a), cl.release(b), cl.release(p)
+    assert cl.free_gpus() == cl.total_gpus
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 64),
+                          st.sampled_from(["machine", "rack", "network",
+                                           "scatter"])),
+                min_size=1, max_size=40),
+       st.randoms())
+def test_alloc_release_conserves_capacity(ops, rnd):
+    cl = ClusterTopology(n_racks=2)
+    held = []
+    for g, level in ops:
+        p = cl.allocate(g, level)
+        if p is not None:
+            assert p.n_gpus == g
+            held.append(p)
+        assert 0 <= cl.free_gpus() <= cl.total_gpus
+        assert all(0 <= f <= cl.gpus_per_machine for f in cl.free)
+        if held and rnd.random() < 0.4:
+            cl.release(held.pop(rnd.randrange(len(held))))
+    for p in held:
+        cl.release(p)
+    assert cl.free_gpus() == cl.total_gpus
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=st.integers(1, 64))
+def test_machine_allocation_is_single_machine(g):
+    cl = ClusterTopology(n_racks=1)
+    p = cl.allocate(g, "machine")
+    if g <= 8:
+        assert p is not None and len(p.machines()) == 1
+    else:
+        assert p is None

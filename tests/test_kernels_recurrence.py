@@ -1,0 +1,73 @@
+"""RG-LRU and RWKV6 Pallas kernels vs jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.rglru_scan import rglru_reference, rglru_scan
+from repro.kernels.rwkv6_wkv import rwkv6_reference, rwkv6_wkv
+
+
+@pytest.mark.parametrize("B,T,W,bt,bw", [
+    (1, 32, 32, 8, 16), (2, 128, 64, 32, 32), (3, 64, 96, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_kernel(B, T, W, bt, bw, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(T * W), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, W))).astype(dtype)
+    b = (jax.random.normal(ks[1], (B, T, W)) * 0.1).astype(dtype)
+    h0 = jax.random.normal(ks[2], (B, W), jnp.float32)
+    ref_h, ref_l = rglru_reference(a, b, h0)
+    pal_h, pal_l = rglru_scan(a, b, h0, backend="pallas", interpret=True,
+                              block_t=bt, block_w=bw)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(pal_h, np.float32),
+                               np.asarray(ref_h, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(pal_l), np.asarray(ref_l), atol=tol)
+
+
+@pytest.mark.parametrize("B,T,H,D,bt", [
+    (1, 16, 2, 8, 8), (2, 64, 3, 16, 16), (1, 48, 4, 32, 16),
+])
+def test_rwkv6_kernel(B, T, H, D, bt):
+    ks = jax.random.split(jax.random.PRNGKey(B * T * H), 6)
+    r = jax.random.normal(ks[0], (B, T, H, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, D)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D)))
+    u = jax.random.normal(ks[4], (H, D)) * 0.5
+    s0 = jax.random.normal(ks[5], (B, H, D, D)) * 0.1
+    ry, rs = rwkv6_reference(r, k, v, w, u, s0)
+    py, ps = rwkv6_wkv(r, k, v, w, u, s0, backend="pallas", interpret=True,
+                       block_t=bt)
+    np.testing.assert_allclose(np.asarray(py), np.asarray(ry), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ps), np.asarray(rs), atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 2), t=st.sampled_from([16, 32, 64]),
+       w=st.sampled_from([16, 32]))
+def test_rglru_decay_bounds_property(b, t, w):
+    """With |a|<1 and bounded b, the state stays bounded (stability)."""
+    ks = jax.random.split(jax.random.PRNGKey(b * t + w), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, t, w)))
+    bb = jnp.clip(jax.random.normal(ks[1], (b, t, w)), -1, 1)
+    h, h_last = rglru_reference(a, bb)
+    bound = t + 1.0
+    assert bool(jnp.all(jnp.abs(h) <= bound))
+    assert bool(jnp.all(jnp.isfinite(h_last)))
+
+
+def test_rglru_state_continuation():
+    """Scanning [x1;x2] == scanning x1 then x2 from its final state."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 64, 16)))
+    b = jax.random.normal(ks[1], (2, 64, 16)) * 0.2
+    h_full, last_full = rglru_reference(a, b)
+    h1, l1 = rglru_reference(a[:, :32], b[:, :32])
+    h2, l2 = rglru_reference(a[:, 32:], b[:, 32:], l1)
+    np.testing.assert_allclose(np.asarray(h_full[:, 32:]), np.asarray(h2),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(last_full), np.asarray(l2),
+                               atol=1e-6)

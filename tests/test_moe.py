@@ -1,0 +1,57 @@
+"""Gather-based MoE dispatch vs the dense per-token oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.moe import moe_block, moe_block_dense_reference
+from repro.models.schema import block_schema, init_params
+from repro.models import lm
+
+
+def _moe_params(cfg, key):
+    # materialize just one block's params via the full init machinery
+    full = lm.init_params(cfg, key, jnp.float32)
+    blocks = full["blocks"]
+    return jax.tree.map(lambda a: a[0], blocks)
+
+
+@pytest.mark.parametrize("name", ["qwen2-moe-a2.7b", "qwen3-moe-30b-a3b"])
+def test_moe_equals_dense_reference_no_drops(name):
+    cfg = ARCHS[name].reduced()
+    # capacity high enough that nothing drops -> exact equality
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    p = _moe_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+    out = moe_block(p, x, cfg=cfg)
+    ref = moe_block_dense_reference(p, x, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_moe_capacity_drops_bounded():
+    """With tiny capacity, output degrades gracefully (drops to residual)."""
+    cfg = ARCHS["qwen3-moe-30b-a3b"].reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.1))
+    p = _moe_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    out = moe_block(p, x, cfg=cfg)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_router_topk_normalization():
+    cfg = ARCHS["qwen3-moe-30b-a3b"].reduced()  # router_norm_topk=True
+    from repro.models.moe import _router
+    p = _moe_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, cfg.d_model))
+    y = x  # router consumes normed input in the block; fine for this check
+    gates, idx, probs = _router(y, p, cfg.moe)
+    np.testing.assert_allclose(np.asarray(jnp.sum(gates, -1)), 1.0, atol=1e-5)
+    assert int(jnp.max(idx)) < cfg.moe.n_experts

@@ -1,0 +1,93 @@
+"""Sharding-rule invariants for the production mesh (no jax devices needed)."""
+from collections import Counter
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.models.schema import Param, model_schema, param_logical_axes
+from repro.sharding import make_rules, spec_for
+import jax
+
+
+class FakeMesh:
+    """Just enough of a Mesh for make_rules()."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESHES = {
+    "pod16x16": FakeMesh({"data": 16, "model": 16}),
+    "pod2x16x16": FakeMesh({"pod": 2, "data": 16, "model": 16}),
+}
+
+
+def _flat_axes(tree):
+    return jax.tree.leaves(
+        jax.tree.map(lambda p: p, tree, is_leaf=lambda x: isinstance(x, Param)),
+        is_leaf=lambda x: isinstance(x, Param))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh_name", sorted(MESHES))
+def test_no_duplicate_mesh_axes_in_any_param_spec(arch, mesh_name):
+    cfg = ARCHS[arch]
+    mesh = MESHES[mesh_name]
+    rules = make_rules(cfg, mesh)
+    for p in _flat_axes(model_schema(cfg)):
+        spec = spec_for(p.axes, rules)
+        used = []
+        for entry in spec:
+            if entry is None:
+                continue
+            used.extend(entry if isinstance(entry, tuple) else (entry,))
+        dup = [a for a, c in Counter(used).items() if c > 1]
+        assert not dup, (arch, p.axes, spec)
+
+
+#: logical axes where GSPMD's padded (uneven) sharding is the intended
+#: policy (heads 40->48, experts 60->64); everything else must divide cleanly
+_PAD_OK = {"heads", "kv_heads", "experts"}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_sharded_dims_divide_mesh_or_pad_allowed(arch):
+    cfg = ARCHS[arch]
+    mesh = MESHES["pod16x16"]
+    rules = make_rules(cfg, mesh)
+    for p in _flat_axes(model_schema(cfg)):
+        spec = spec_for(p.axes, rules)
+        for dim, ax, entry in zip(p.shape, p.axes, tuple(spec)):
+            if entry is None or ax in _PAD_OK:
+                continue
+            size = 1
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                size *= mesh.shape[a]
+            assert dim % size == 0, (arch, p.shape, p.axes, spec)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_batch_rule_sheds_for_small_batches(arch):
+    cfg = ARCHS[arch]
+    mesh = MESHES["pod2x16x16"]
+    rules = make_rules(cfg, mesh, global_batch=1)
+    assert rules["batch"] is None
+    rules = make_rules(cfg, mesh, global_batch=256)
+    assert rules["batch"] == ("pod", "data")
+    rules = make_rules(cfg, mesh, global_batch=16)  # divides data only
+    assert rules["batch"] == ("data",)
+
+
+def test_heads_padded_sharding():
+    rules = make_rules(ARCHS["minitron-4b"], MESHES["pod16x16"])
+    assert rules["heads"] == "model"     # 24 heads -> padded 16-way sharding
+    rules = make_rules(ARCHS["yi-9b"], MESHES["pod16x16"])
+    assert rules["heads"] == "model"     # 32 % 16 == 0
+    assert rules["kv_heads"] is None     # kv=4 -> cache seq-sharded instead
+    assert rules["kv_seq"] == "model"
+
+
+def test_expert_rules():
+    rules = make_rules(ARCHS["qwen3-moe-30b-a3b"], MESHES["pod16x16"])
+    assert rules["experts"] == "model"
+    assert rules["expert_ffn"] is None
