@@ -1,23 +1,32 @@
-"""Shared benchmark setup: schedulers, cluster sizes, trace scale, output."""
+"""Shared benchmark setup — a thin view over repro.experiments.
+
+Every figure/table runs (scenario, policy, seed) cells through
+``repro.experiments.run_one`` and consumes the v1 artifact's ``metrics``
+dict; this module only adds per-process memoization (figures share cells),
+artifact I/O, and CSV row printing.
+"""
 from __future__ import annotations
 
 import json
 import pathlib
-import time
+import sys
 
-from repro.configs import ARCHS
-from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
-                        make_batch_trace, make_poisson_trace)
-from repro.core.policies import make_policy
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:  # allow `python -m benchmarks.run` without install
+    sys.path.insert(0, _SRC)
+
+from repro.configs import ARCHS  # noqa: E402
+from repro.core import CommModel  # noqa: E402
+from repro.experiments import get_scenario, run_one_timed  # noqa: E402
 
 SCHEDULERS = ["gandiva", "tiresias", "dally-manual", "dally-nowait",
               "dally-fullyconsolidated", "dally"]
 RACKS = (2, 4, 8, 16)
-N_BATCH_JOBS = 500   # paper §V-A
-N_POISSON_JOBS = 400
 SEED = 0
 
 ART = pathlib.Path(__file__).parent / "artifacts"
+
+TRACE_SCENARIO = {"batch": "paper-batch", "poisson": "paper-poisson"}
 
 
 def archs():
@@ -44,25 +53,15 @@ _SIM_CACHE = {}
 
 def run_sim(policy: str, n_racks: int, *, trace="batch", n_jobs=None,
             seed=SEED, comm=None):
+    """One simulation cell -> the artifact's metrics dict (+ wall_s)."""
     key = (policy, n_racks, trace, n_jobs, seed, comm is None)
     if comm is None and key in _SIM_CACHE:
         return _SIM_CACHE[key]
-    use_cache = comm is None
-    comm = comm or comm_model()
-    if trace == "batch":
-        jobs = make_batch_trace(archs(), n_jobs=n_jobs or N_BATCH_JOBS,
-                                seed=seed)
-    else:
-        jobs = make_poisson_trace(archs(), n_jobs=n_jobs or N_POISSON_JOBS,
-                                  seed=seed)
-    sim = ClusterSimulator(ClusterTopology(n_racks=n_racks),
-                           make_policy(policy), comm)
-    for j in jobs:
-        sim.submit(j)
-    t0 = time.time()
-    res = sim.run()
-    res["wall_s"] = time.time() - t0
-    if use_cache:
+    art = run_one_timed(get_scenario(TRACE_SCENARIO[trace]), policy=policy,
+                        seed=seed, n_racks=n_racks, n_jobs=n_jobs, comm=comm)
+    res = art["metrics"]
+    res["wall_s"] = art["wall_s"]
+    if comm is None:
         _SIM_CACHE[key] = res
     return res
 

@@ -2,7 +2,7 @@
 (batch arrivals, 8 racks)."""
 from __future__ import annotations
 
-from .common import SCHEDULERS, comm_model, row, run_sim, save
+from .common import SCHEDULERS, row, run_sim, save
 
 
 def main(small=False):

@@ -1,7 +1,7 @@
 """Fig. 7 analogue: makespan, batch arrivals, 2/4/8/16 racks, all schedulers."""
 from __future__ import annotations
 
-from .common import RACKS, SCHEDULERS, comm_model, row, run_sim, save
+from .common import RACKS, SCHEDULERS, row, run_sim, save
 
 
 def main(small=False):

@@ -2,7 +2,7 @@
 communication latency — batch arrivals across rack counts."""
 from __future__ import annotations
 
-from .common import RACKS, SCHEDULERS, comm_model, row, run_sim, save
+from .common import RACKS, SCHEDULERS, row, run_sim, save
 
 
 def main(small=False):

@@ -1,29 +1,25 @@
 """Run the paper's headline experiment at demo scale: Dally vs Tiresias vs
-Gandiva on a congested batch trace.
+Gandiva on a congested batch trace — a thin view over the experiments
+subsystem (scenario "demo"; see docs/experiments.md).
 
-    PYTHONPATH=src python examples/cluster_scheduling.py
+    python examples/cluster_scheduling.py
 """
-from repro.configs import ARCHS
-from repro.core import ClusterSimulator, ClusterTopology, CommModel, \
-    make_batch_trace
-from repro.core.policies import make_policy
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.experiments import run_one  # noqa: E402
 
 POLICIES = ["gandiva", "tiresias", "dally-nowait", "dally"]
 
 
 def main():
-    archs = list(ARCHS.values())
-    comm = CommModel.from_configs(archs)
     print(f"{'scheduler':18s} {'makespan':>10s} {'avg JCT':>9s} "
           f"{'p95 queue':>10s} {'avg comm':>9s} {'util':>5s}")
     results = {}
     for pol in POLICIES:
-        jobs = make_batch_trace(archs, n_jobs=200, seed=1)
-        sim = ClusterSimulator(ClusterTopology(n_racks=4),
-                               make_policy(pol), comm)
-        for j in jobs:
-            sim.submit(j)
-        r = sim.run()
+        r = run_one("demo", policy=pol, seed=1)["metrics"]
         results[pol] = r
         print(f"{pol:18s} {r['makespan']/3600:9.1f}h "
               f"{r['jct']['avg']/3600:8.1f}h "

@@ -1,0 +1,113 @@
+"""Minimal, deterministic stand-in for `hypothesis` when it is not installed.
+
+The real library is declared in ``pyproject.toml`` (``pip install -e .[test]``)
+and is always preferred; this fallback exists so the test suite still
+*collects and runs* in hermetic environments where new packages cannot be
+installed.  It implements exactly the subset this repo's property tests use:
+
+  given, settings, strategies.{integers, floats, booleans, sampled_from,
+                               lists, tuples, randoms}
+
+Semantics: ``@given`` runs the test body ``max_examples`` times with values
+drawn from a ``random.Random`` seeded from the test's qualified name — the
+same inputs on every run and on every machine (no shrinking, no database).
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+from typing import Any, Callable, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """A strategy is just a deterministic sampler: ``draw(rng) -> value``."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int = -(2**31), max_value: int = 2**31) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements))
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10, **_ignored) -> SearchStrategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def randoms(**_ignored) -> SearchStrategy:
+    return SearchStrategy(lambda rng: random.Random(rng.getrandbits(64)))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def apply(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return apply
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_fallback_max_examples", None) or getattr(
+                wrapper, "_fallback_max_examples", None) or _DEFAULT_MAX_EXAMPLES
+            seed = f"{fn.__module__}.{fn.__qualname__}"
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn_args = tuple(s.draw(rng) for s in arg_strategies)
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn_args, **kwargs, **drawn_kw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._fallback_max_examples = getattr(fn, "_fallback_max_examples",
+                                                 None)
+        return wrapper
+    return decorate
+
+
+def install() -> None:
+    """Register a fake ``hypothesis`` package in ``sys.modules``."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "tuples", "randoms"):
+        setattr(st, name, globals()[name])
+    st.SearchStrategy = SearchStrategy
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

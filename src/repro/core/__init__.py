@@ -17,4 +17,11 @@ from .job import Job  # noqa: F401
 from .metrics import summarize  # noqa: F401
 from .simulator import ClusterSimulator  # noqa: F401
 from .topology import ClusterTopology, Placement  # noqa: F401
-from .trace import make_batch_trace, make_poisson_trace  # noqa: F401
+from .trace import (  # noqa: F401
+    load_csv_trace,
+    make_batch_trace,
+    make_bursty_trace,
+    make_mixed_trace,
+    make_poisson_trace,
+    save_csv_trace,
+)

@@ -30,13 +30,25 @@ class CommModel:
                  profile: HardwareProfile = TPU_V5E,
                  overlap_frac: float = 0.25,
                  grad_dtype_bytes: int = 2,
-                 calibration: Optional[Dict[str, float]] = None):
-        """arch_table: name -> {"params": N, "layers": L} (+ optional extras)."""
+                 calibration: Optional[Dict[str, float]] = None,
+                 cache_size: int = 1 << 16):
+        """arch_table: name -> {"params": N, "layers": L} (+ optional extras).
+
+        cache_size: max entries for the all-reduce memo cache (0 disables).
+        The latency only depends on a placement's *shape* — (tier, total
+        GPUs, machine count, max GPUs on one machine) — not on which
+        machines were picked, so large sweeps hit a few hundred distinct
+        keys per model while querying millions of placements.
+        """
         self.arch_table = arch_table
         self.profile = profile
         self.overlap_frac = overlap_frac
         self.grad_dtype_bytes = grad_dtype_bytes
         self.calibration = calibration or {}
+        self.cache_size = cache_size
+        self._ar_cache: Dict[tuple, float] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     # -- construction helpers -------------------------------------------
     @classmethod
@@ -72,6 +84,7 @@ class CommModel:
                 analytic = 2.0 * grad / n
                 self.calibration[name] = min(max(measured / analytic, 0.1),
                                              50.0)
+        self._ar_cache.clear()  # calibration changes the cached latencies
 
     # -- core latency model ---------------------------------------------
     def _ring(self, bytes_, n, tier_name, n_buckets):
@@ -86,21 +99,34 @@ class CommModel:
                        machines_per_rack: int,
                        gpus_per_machine: int) -> float:
         """Hierarchical all-reduce time for one iteration's gradients."""
+        tier = placement.tier(machines_per_rack)
+        n_machines = len(placement.alloc)
+        n_gpus = placement.n_gpus
+        max_local = max(c for _, c in placement.alloc)
+        key = (model, tier, n_gpus, n_machines, max_local)
+        if self.cache_size:
+            hit = self._ar_cache.get(key)
+            if hit is not None:
+                self.cache_hits += 1
+                return hit
+            self.cache_misses += 1
+
         info = self.arch_table[model]
         M = info["params"] * self.grad_dtype_bytes
         M *= self.calibration.get(model, 1.0)
         L = max(info["layers"], 1)
-        tier = placement.tier(machines_per_rack)
-        n_machines = len(placement.machines())
-        n_gpus = placement.n_gpus
 
         if tier == "machine":
-            return self._ring(M, n_gpus, "machine", L)
-        # stage 1: reduce within each machine (max gpus on one machine)
-        max_local = max(c for _, c in placement.alloc)
-        t = self._ring(M, max_local, "machine", L)
-        # stage 2: ring across machine leaders at the bottleneck tier
-        t += self._ring(M, n_machines, tier, L)
+            t = self._ring(M, n_gpus, "machine", L)
+        else:
+            # stage 1: reduce within each machine (max gpus on one machine)
+            t = self._ring(M, max_local, "machine", L)
+            # stage 2: ring across machine leaders at the bottleneck tier
+            t += self._ring(M, n_machines, tier, L)
+        if self.cache_size:
+            if len(self._ar_cache) >= self.cache_size:
+                self._ar_cache.clear()
+            self._ar_cache[key] = t
         return t
 
     def iteration_time(self, model: str, compute_time: float,

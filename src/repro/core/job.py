@@ -15,7 +15,7 @@ from typing import Optional
 from .topology import Placement
 
 
-@dataclass
+@dataclass(eq=False)  # identity equality: O(1) list removal in the simulator
 class Job:
     job_id: int
     model: str                   # arch name (network-sensitivity key)

@@ -45,20 +45,27 @@ class Timeline:
                    zip(self.busy_gpus, self.total_gpus)) / len(self.t)
 
 
-def summarize(finished, timeline: Timeline) -> Dict:
+def summarize(finished, timeline: Timeline, unfinished=()) -> Dict:
+    """Aggregate run metrics.  ``unfinished`` (running + still-waiting jobs
+    of a max_time-truncated run) contributes to the whole-run work totals so
+    truncated runs don't under-report t_run / comm_time."""
     jcts = [j.finish_time - j.arrival for j in finished]
     queue = [j.t_queue for j in finished]
     comm = [j.comm_time for j in finished]
     makespan = (max(j.finish_time for j in finished)
                 - min(j.arrival for j in finished)) if finished else 0.0
+    everyone = list(finished) + list(unfinished)
     return {
         "n_finished": len(finished),
+        "n_unfinished": len(unfinished),
         "makespan": makespan,
         "jct": _stats(jcts),
         "queueing_delay": _stats(queue),
         "comm_latency": _stats(comm),
         "avg_utilization": timeline.avg_utilization(),
-        "preemptions": sum(j.preemptions for j in finished),
+        "preemptions": sum(j.preemptions for j in everyone),
+        "total_t_run": sum(j.t_run for j in everyone),
+        "total_comm_time": sum(j.comm_time for j in everyone),
         "jct_values": jcts,
         "timeline": {
             "t": timeline.t,

@@ -18,6 +18,13 @@ class Policy:
     # minimum priority-value gap (in the policy's own priority units) between
     # a running victim and the waiting job before eviction is allowed
     preemption_margin = 0.3
+    # Contract: priority(job, now) does not change while the job sits in the
+    # wait queue (it may change while running).  True for every built-in
+    # policy (Nw_sens / 2DAS freeze without progress; FIFO is constant), and
+    # it lets the simulator keep the wait queue sorted incrementally instead
+    # of re-sorting every round.  Set False in subclasses whose waiting
+    # priority depends on `now` (e.g. pure starvation-age priority).
+    waiting_priority_static = True
 
     def priority(self, job, now: float) -> float:
         raise NotImplementedError

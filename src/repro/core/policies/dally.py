@@ -26,8 +26,7 @@ class DallyPolicy(Policy):
         # a job that cannot fit a machine/rack has the respective timer at 0
         if job.n_gpus > sim.cluster.gpus_per_machine:
             t_mc = 0.0
-        rack_cap = sim.cluster.machines_per_rack * sim.cluster.gpus_per_machine
-        if job.n_gpus > rack_cap:
+        if job.n_gpus > sim.cluster.max_rack_capacity:
             t_rk = 0.0
         return t_mc, t_rk
 
@@ -38,13 +37,19 @@ class DallyPolicy(Policy):
         t_starv = job.starvation(now)
         t_mc, t_rk = self._timers(job, sim, now)
 
-        if cl.max_free_on_machine() >= g:
+        # explicit capacity guards: a tier that can NEVER hold the job must
+        # not be granted (or waited for), independent of the timer values —
+        # previously only the _timers zeroing protected this implicitly
+        fits_machine = g <= cl.gpus_per_machine
+        fits_rack = g <= cl.max_rack_capacity
+
+        if fits_machine and cl.max_free_on_machine() >= g:
             return "machine"
-        if t_starv < t_mc:
+        if fits_machine and t_starv < t_mc:
             return None  # reject: keep waiting for a machine-level offer
-        if cl.max_free_on_rack() >= g:
+        if fits_rack and cl.max_free_on_rack() >= g:
             return "rack"
-        if t_starv < t_rk:
+        if fits_rack and t_starv < t_rk:
             return None  # reject: keep waiting for a rack-level offer
         if cl.free_gpus() >= g:
             return "network"

@@ -43,8 +43,6 @@ class GandivaPolicy(Policy):
             if feasible_better and (best is None or order[target] <
                                     order[best[1]]):
                 best = (job, target)
-            # re-take original placement
-            for m, c in job.placement.alloc:
-                sim.cluster.free[m] -= c
+            sim.cluster.retake(job.placement)
         if best is not None:
             sim.migrate(best[0], best[1], now)

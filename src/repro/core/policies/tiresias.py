@@ -41,8 +41,7 @@ class TiresiasPolicy(Policy):
                 if cl.max_free_on_machine() >= g:
                     return "machine"
                 return None  # wait indefinitely for machine-level
-            rack_cap = cl.machines_per_rack * cl.gpus_per_machine
-            if g <= rack_cap:
+            if g <= cl.max_rack_capacity:
                 if cl.max_free_on_rack() >= g:
                     return "rack"
                 return None

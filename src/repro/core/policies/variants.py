@@ -23,8 +23,7 @@ class DallyManualPolicy(DallyPolicy):
         t_mc, t_rk = self._fixed
         if job.n_gpus > sim.cluster.gpus_per_machine:
             t_mc = 0.0
-        rack_cap = sim.cluster.machines_per_rack * sim.cluster.gpus_per_machine
-        if job.n_gpus > rack_cap:
+        if job.n_gpus > sim.cluster.max_rack_capacity:
             t_rk = 0.0
         return t_mc, t_rk
 

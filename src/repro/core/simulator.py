@@ -14,8 +14,6 @@ checkpoint/resume contract (§IV-B).
 from __future__ import annotations
 
 import heapq
-import math
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from .commmodel import CommModel
@@ -44,14 +42,17 @@ class ClusterSimulator:
         self.events: List = []
         self._seq = 0
         self.waiting: List[Job] = []
+        self._waiting_dirty = False
         self.running: List[Job] = []
         self.finished: List[Job] = []
+        self.rejected: List[Job] = []  # demand exceeds cluster capacity
         self.jobs: Dict[int, Job] = {}
         self.timeline = Timeline()
         self.machine_slowdown: Dict[int, float] = {}
         for t, machine, factor in (slowdown_events or []):
             self._push(t, SLOWDOWN, (machine, factor))
         self._completion_version: Dict[int, int] = {}
+        self._pending_arrivals = 0
 
     # ------------------------------------------------------------------
     def _push(self, t, kind, payload):
@@ -59,8 +60,27 @@ class ClusterSimulator:
         heapq.heappush(self.events, (t, kind, self._seq, payload))
 
     def submit(self, job: Job):
+        assert job.job_id not in self.jobs, f"duplicate job_id {job.job_id}"
+        if job.n_gpus > self.cluster.total_gpus:
+            # can never be placed: admitting it would wedge the round loop
+            # forever (every offer rejected, queue never drains)
+            self.rejected.append(job)
+            return
         self.jobs[job.job_id] = job
+        self._pending_arrivals += 1
         self._push(job.arrival, ARRIVAL, job.job_id)
+
+    def _enqueue(self, job: Job, now: float):
+        """Append to the wait queue.  When the policy's waiting priorities
+        are static (see Policy contract) the priority key is computed once
+        here, and the queue is lazily re-sorted at the next round only if
+        membership changed — removals keep order, so thousands of idle
+        rounds skip the O(n log n) re-sort entirely."""
+        if self.policy.waiting_priority_static:
+            job._wait_key = (self.policy.priority(job, now), job.arrival,
+                             job.job_id)
+        self.waiting.append(job)
+        self._waiting_dirty = True
 
     # ------------------------------------------------------------------
     def _slow_factor(self, placement) -> float:
@@ -110,13 +130,13 @@ class ClusterSimulator:
         job.preemptions += 1
         self._completion_version[job.job_id] += 1  # invalidate completion
         self.running.remove(job)
-        self.waiting.append(job)
         job.wait_since = now
         # starvation clock restarts: the job HELD resources until now, so its
         # wait towards the delay timers begins at the preemption instant
         # (otherwise run time would count as starvation and poison Algo 2's
         # wait-time lists)
         job.last_assignment_time = now
+        self._enqueue(job, now)
 
     def migrate(self, job: Job, level: str, now: float):
         """Migration = preempt + immediate restart at the given level."""
@@ -133,8 +153,7 @@ class ClusterSimulator:
             return None
         self.cluster.release(job.placement)
         best = self.cluster.best_feasible_level(job.n_gpus)
-        for m, c in job.placement.alloc:  # re-take
-            self.cluster.free[m] -= c
+        self.cluster.retake(job.placement)
         if best is not None and self.TIER_ORDER[best] < self.TIER_ORDER[cur]:
             return best
         return None
@@ -142,16 +161,45 @@ class ClusterSimulator:
     # ------------------------------------------------------------------
     def _scheduling_round(self, now: float):
         self.policy.on_round(self, now)
-        # offers in increasing priority value
-        self.waiting.sort(key=lambda j: (self.policy.priority(j, now), j.arrival, j.job_id))
+        # priority(job, now) is stable within a round (fixed `now`; preempting
+        # a job folds its in-flight progress into t_run, leaving the value at
+        # `now` unchanged), so compute it at most once per job per round
+        # instead of per sort-compare / min / victim scan
+        prio_cache: Dict[int, float] = {}
+
+        def prio(j):
+            v = prio_cache.get(j.job_id)
+            if v is None:
+                v = self.policy.priority(j, now)
+                prio_cache[j.job_id] = v
+            return v
+
+        # offers in increasing priority value; with static waiting priorities
+        # the keys were computed at enqueue time and the queue only needs
+        # re-sorting when membership was added since the last sort
+        if self.policy.waiting_priority_static:
+            if self._waiting_dirty:
+                self.waiting.sort(key=lambda j: j._wait_key)
+                self._waiting_dirty = False
+        else:
+            self.waiting.sort(key=lambda j: (prio(j), j.arrival, j.job_id))
         made_progress = True
         preempted = 0
         while made_progress:
             made_progress = False
+            # single pass per iteration; placements only shrink the free
+            # pool, so jobs whose demand exceeds it are skipped with an O(1)
+            # check instead of a full policy/availability probe.  Anything
+            # that frees or re-prices resources (preemption below, delay-
+            # timer updates from acceptances) re-arms the outer loop.
+            free = self.cluster.free_gpus()
             for job in list(self.waiting):
+                if job.n_gpus > free:
+                    continue  # cannot fit at any tier: skip the policy call
                 level = self.policy.on_offer(job, self, now)
                 if level is not None:
                     self._start(job, level, now)
+                    free = self.cluster.free_gpus()
                     made_progress = True
             # network-sensitive preemption: if the most-starved waiting job
             # cannot be placed at all, evict running jobs whose priority
@@ -159,17 +207,21 @@ class ClusterSimulator:
             # preemption thrash), oldest-runtime-eligible, worst-first
             if (self.waiting and self.policy.preemption_enabled
                     and preempted < self.max_preemptions_per_round):
-                top = min(self.waiting,
-                          key=lambda j: (self.policy.priority(j, now),
-                                         j.arrival, j.job_id))
+                if (self.policy.waiting_priority_static
+                        and not self._waiting_dirty):
+                    top = self.waiting[0]  # sorted; removals keep order
+                elif self.policy.waiting_priority_static:
+                    top = min(self.waiting, key=lambda j: j._wait_key)
+                else:
+                    top = min(self.waiting,
+                              key=lambda j: (prio(j), j.arrival, j.job_id))
                 if self.cluster.free_gpus() < top.n_gpus:
-                    top_p = self.policy.priority(top, now)
+                    top_p = prio(top)
                     victims = sorted(
                         (j for j in self.running
                          if now - j.run_start > self.preemption_min_runtime
-                         and self.policy.priority(j, now) >
-                         top_p + self.policy.preemption_margin),
-                        key=lambda j: -self.policy.priority(j, now))
+                         and prio(j) > top_p + self.policy.preemption_margin),
+                        key=lambda j: -prio(j))
                     freed = self.cluster.free_gpus()
                     for v in victims:
                         if (freed >= top.n_gpus or
@@ -186,12 +238,19 @@ class ClusterSimulator:
         while self.events:
             t, kind, _, payload = heapq.heappop(self.events)
             if t > max_time:
+                # truncated run: account in-flight jobs' progress up to the
+                # horizon, else their t_run/comm_time are silently dropped
+                # from results()
+                self.clock = max(self.clock, min(max_time, t))
+                for job in self.running:
+                    self._progress(job, self.clock)
                 break
             self.clock = t
             if kind == ARRIVAL:
                 job = self.jobs[payload]
                 job.wait_since = t
-                self.waiting.append(job)
+                self._pending_arrivals -= 1
+                self._enqueue(job, t)
                 self._scheduling_round(t)
             elif kind == ROUND:
                 if self.waiting:
@@ -200,7 +259,11 @@ class ClusterSimulator:
                     t, self.cluster.total_gpus - self.cluster.free_gpus(),
                     self.cluster.total_gpus,
                     len(self.waiting) + len(self.running))
-                if self.waiting or self.running or self.events:
+                # re-arm only while work exists or is still due: pending
+                # SLOWDOWN events alone (e.g. a long contention schedule)
+                # must not keep the clock — and the idle-sample timeline —
+                # running after the last job finished
+                if self.waiting or self.running or self._pending_arrivals:
                     self._push(t + self.round_period, ROUND, None)
             elif kind == COMPLETE:
                 job_id, version = payload
@@ -225,4 +288,7 @@ class ClusterSimulator:
     # ------------------------------------------------------------------
     def results(self) -> Dict:
         from .metrics import summarize
-        return summarize(self.finished, self.timeline)
+        out = summarize(self.finished, self.timeline,
+                        unfinished=self.running + self.waiting)
+        out["n_rejected"] = len(self.rejected)
+        return out

@@ -5,11 +5,17 @@ placement's *network tier* is the worst interconnect it spans:
   machine — all GPUs on one machine (NVSwitch / intra-host ICI)
   rack    — one rack, multiple machines (IB Quantum / pod ICI)
   network — multiple racks (Spectrum Ethernet / DCN)
+
+Racks may be heterogeneous (``rack_sizes``): machine ids keep a fixed
+per-rack stride of ``machines_per_rack = max(rack_sizes)`` so tier math
+stays pure integer division, and the missing machine slots simply hold
+zero free GPUs forever.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List, Optional, Sequence
+
+from dataclasses import dataclass
 
 TIERS = ("machine", "rack", "network")
 
@@ -35,18 +41,35 @@ class Placement:
 
 
 class ClusterTopology:
-    def __init__(self, n_racks: int, machines_per_rack: int = 8,
-                 gpus_per_machine: int = 8):
+    def __init__(self, n_racks: int = 0, machines_per_rack: int = 8,
+                 gpus_per_machine: int = 8,
+                 rack_sizes: Optional[Sequence[int]] = None):
+        if rack_sizes is not None:
+            rack_sizes = tuple(int(s) for s in rack_sizes)
+            assert rack_sizes and all(s > 0 for s in rack_sizes)
+            n_racks = len(rack_sizes)
+            machines_per_rack = max(machines_per_rack, max(rack_sizes))
+        else:
+            assert n_racks > 0
+            rack_sizes = (machines_per_rack,) * n_racks
         self.n_racks = n_racks
         self.machines_per_rack = machines_per_rack
         self.gpus_per_machine = gpus_per_machine
+        self.rack_sizes = rack_sizes
+        # id space keeps a fixed stride; slots past a rack's size stay at 0
         self.n_machines = n_racks * machines_per_rack
-        self.total_gpus = self.n_machines * gpus_per_machine
-        self.free = [gpus_per_machine] * self.n_machines
+        self.total_gpus = sum(rack_sizes) * gpus_per_machine
+        self.free = [0] * self.n_machines
+        for r, size in enumerate(rack_sizes):
+            base = r * machines_per_rack
+            for m in range(base, base + size):
+                self.free[m] = gpus_per_machine
+        self._free_total = self.total_gpus
+        self.max_rack_capacity = max(rack_sizes) * gpus_per_machine
 
     # ------------------------------------------------------------------
     def free_gpus(self) -> int:
-        return sum(self.free)
+        return self._free_total
 
     def rack_free(self, rack: int) -> int:
         base = rack * self.machines_per_rack
@@ -83,6 +106,7 @@ class ClusterTopology:
             for m in range(self.n_machines):
                 if self.free[m] >= g:
                     self.free[m] -= g
+                    self._free_total -= g
                     return Placement(((m, g),))
             return None
         if level == "rack":
@@ -97,10 +121,11 @@ class ClusterTopology:
                 if packed:
                     for m, c in packed:
                         self.free[m] -= c
+                    self._free_total -= g
                     return Placement(tuple(sorted(packed)))
             return None
         if level == "network":
-            if self.free_gpus() < g:
+            if self._free_total < g:
                 return None
             # fill rack-by-rack (most free first) to stay as consolidated
             # as possible even at network level
@@ -118,12 +143,13 @@ class ClusterTopology:
                 if need == 0:
                     break
             assert need == 0
+            self._free_total -= g
             return Placement(tuple(sorted(packed)))
         if level == "scatter":
             # network-AGNOSTIC allocation: take whatever fragments are free in
             # machine-index order — the placement a consolidation-blind
             # scheduler (Gandiva; Tiresias for low-skew jobs) ends up with
-            if self.free_gpus() < g:
+            if self._free_total < g:
                 return None
             packed, need = [], g
             for m in range(self.n_machines):
@@ -136,6 +162,7 @@ class ClusterTopology:
                 if need == 0:
                     break
             assert need == 0
+            self._free_total -= g
             return Placement(tuple(sorted(packed)))
         raise ValueError(level)
 
@@ -143,12 +170,22 @@ class ClusterTopology:
         for m, c in placement.alloc:
             self.free[m] += c
             assert self.free[m] <= self.gpus_per_machine, "double free"
+        self._free_total += placement.n_gpus
+
+    def retake(self, placement: Placement):
+        """Inverse of release: re-occupy a placement's exact machines (used
+        by migration feasibility probes that temporarily free a running
+        job's GPUs)."""
+        for m, c in placement.alloc:
+            self.free[m] -= c
+            assert self.free[m] >= 0, "retake of occupied GPUs"
+        self._free_total -= placement.n_gpus
 
     def best_feasible_level(self, g: int) -> Optional[str]:
         if self.max_free_on_machine() >= g:
             return "machine"
         if self.max_free_on_rack() >= g:
             return "rack"
-        if self.free_gpus() >= g:
+        if self._free_total >= g:
             return "network"
         return None

@@ -15,9 +15,10 @@ generate seeded synthetic traces matched to the published statistics:
 """
 from __future__ import annotations
 
+import csv
 import math
 import random
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 from repro.types import TPU_V5E, HardwareProfile
 
@@ -25,6 +26,13 @@ from .job import Job
 
 GPU_DEMAND_PMF = [(1, 0.15), (2, 0.10), (4, 0.15), (8, 0.25),
                   (16, 0.15), (32, 0.12), (64, 0.08)]
+
+# Datacenter-mix classes (Helios/PAI-style): the bulk of jobs are small
+# debugging/1-8 GPU runs, a thin tail of production jobs wants 16-128 GPUs
+# and runs for much longer (Hu et al., "Characterization and Prediction of
+# Deep Learning Workloads in Large-Scale GPU Datacenters").
+SMALL_JOB_PMF = [(1, 0.45), (2, 0.25), (4, 0.20), (8, 0.10)]
+LARGE_JOB_PMF = [(16, 0.35), (32, 0.30), (64, 0.25), (128, 0.10)]
 
 # Per-GPU work per iteration: sampled per job (log-uniform over powers of
 # two).  Small micro-batches => communication up to several x compute (the
@@ -55,14 +63,14 @@ def model_skew(cfg) -> float:
     return max(sizes) / max(sum(sizes), 1)
 
 
-def _sample_demand(rng: random.Random) -> int:
+def _sample_demand(rng: random.Random, pmf=GPU_DEMAND_PMF) -> int:
     r = rng.random()
     acc = 0.0
-    for g, p in GPU_DEMAND_PMF:
+    for g, p in pmf:
         acc += p
         if r <= acc:
             return g
-    return GPU_DEMAND_PMF[-1][0]
+    return pmf[-1][0]
 
 
 def _make_jobs(n_jobs, arrivals, archs, seed,
@@ -108,3 +116,192 @@ def make_poisson_trace(archs: Sequence, n_jobs: int = 400, seed: int = 0,
         t += rng.expovariate(1.0 / mean_interarrival)
         arrivals.append(t)
     return _make_jobs(n_jobs, arrivals, archs, seed, **kw)
+
+
+def make_bursty_trace(archs: Sequence, n_jobs: int = 400, seed: int = 0,
+                      mean_interarrival: float = 240.0,
+                      period: float = 86_400.0,
+                      peak_to_trough: float = 4.0,
+                      flash_crowds: int = 2,
+                      flash_fraction: float = 0.2,
+                      flash_window: float = 600.0, **kw) -> List[Job]:
+    """Bursty arrivals: a diurnal (sinusoidal-rate) Poisson process plus
+    optional flash crowds — tight bursts of submissions within a few
+    minutes (conference deadline / incident-retry behaviour).
+
+    The diurnal component is an inhomogeneous Poisson process sampled by
+    thinning at the peak rate; ``peak_to_trough`` sets the day/night rate
+    ratio.  ``flash_crowds`` bursts together hold ``flash_fraction`` of all
+    jobs, each burst spread uniformly over ``flash_window`` seconds.
+    """
+    rng = random.Random(seed + 20_000)
+    n_flash = int(n_jobs * flash_fraction) if flash_crowds > 0 else 0
+    n_diurnal = n_jobs - n_flash
+    lam_avg = 1.0 / mean_interarrival
+    a = (peak_to_trough - 1.0) / (peak_to_trough + 1.0)
+    lam_peak = lam_avg * (1.0 + a)
+    t, arrivals = 0.0, []
+    while len(arrivals) < n_diurnal:
+        t += rng.expovariate(lam_peak)
+        rate = lam_avg * (1.0 + a * math.sin(2.0 * math.pi * t / period))
+        if rng.random() < rate / lam_peak:
+            arrivals.append(t)
+    horizon = arrivals[-1] if arrivals else period
+    for k in range(flash_crowds):
+        center = rng.uniform(0.0, horizon)
+        size = n_flash // flash_crowds + (1 if k < n_flash % flash_crowds
+                                          else 0)
+        arrivals.extend(center + rng.uniform(0.0, flash_window)
+                        for _ in range(size))
+    arrivals.sort()
+    return _make_jobs(n_jobs, arrivals, archs, seed, **kw)
+
+
+def make_mixed_trace(archs: Sequence, n_jobs: int = 400, seed: int = 0,
+                     large_fraction: float = 0.15,
+                     mean_interarrival: float = 120.0,
+                     small_median_gpu_hours: float = 1.0,
+                     large_median_gpu_hours: float = 24.0,
+                     sigma: float = 1.2,
+                     profile: HardwareProfile = TPU_V5E) -> List[Job]:
+    """Datacenter mix: mostly small (1-8 GPU, short) jobs with a tail of
+    large (16-128 GPU, long-running) production jobs, Poisson arrivals.
+    128-GPU jobs exceed one rack on the default topology, exercising the
+    network tier end-to-end."""
+    rng = random.Random(seed + 30_000)
+    arch_list = list(archs)
+    t = 0.0
+    jobs = []
+    for i in range(n_jobs):
+        t += rng.expovariate(1.0 / mean_interarrival)
+        large = rng.random() < large_fraction
+        g = _sample_demand(rng, LARGE_JOB_PMF if large else SMALL_JOB_PMF)
+        cfg = rng.choice(arch_list)
+        tokens = rng.choice(TOKENS_PER_GPU_ITER_CHOICES)
+        t_iter = compute_time_per_iter(cfg.n_active_params(), tokens, profile)
+        median = large_median_gpu_hours if large else small_median_gpu_hours
+        gpu_hours = min(rng.lognormvariate(math.log(median), sigma),
+                        MAX_JOB_HOURS)
+        iters = max(int(gpu_hours * 3600.0 / t_iter), 10)
+        jobs.append(Job(job_id=i, model=cfg.name, n_gpus=g,
+                        total_iters=iters, compute_time_per_iter=t_iter,
+                        arrival=t, skew=model_skew(cfg)))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# CSV trace replay (Philly / Helios-style)
+# ---------------------------------------------------------------------------
+
+CSV_FIELDS = ("job_id", "model", "n_gpus", "total_iters",
+              "compute_time_per_iter", "arrival", "skew")
+
+# accepted aliases for externally-produced traces
+_ALIASES = {
+    "job_id": ("job_id", "jobid", "job"),
+    "arrival": ("arrival", "submit_time", "submitted_time", "submission_time"),
+    "n_gpus": ("n_gpus", "gpus", "num_gpus", "gpu_num", "worker_gpu"),
+    "duration": ("duration", "runtime", "run_time"),
+    "model": ("model", "model_name", "arch"),
+    "total_iters": ("total_iters", "iters", "iterations"),
+    "compute_time_per_iter": ("compute_time_per_iter", "iter_time"),
+    "skew": ("skew",),
+}
+
+
+def _col(row: dict, field: str):
+    for alias in _ALIASES[field]:
+        if alias in row and row[alias] not in ("", None):
+            return row[alias]
+    return None
+
+
+def _parse_time(value):
+    """-> (seconds, was_datetime).  Accepts plain seconds or a datetime
+    string ('2017-10-03 05:51:56', as in real Philly/Helios traces)."""
+    try:
+        return float(value), False
+    except ValueError:
+        from datetime import datetime
+        return datetime.fromisoformat(str(value).strip()).timestamp(), True
+
+
+def save_csv_trace(jobs: Sequence[Job], path) -> None:
+    """Write a trace in the canonical CSV schema (round-trips exactly
+    through load_csv_trace)."""
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(CSV_FIELDS)
+        for j in jobs:
+            w.writerow([j.job_id, j.model, j.n_gpus, j.total_iters,
+                        repr(j.compute_time_per_iter), repr(j.arrival),
+                        repr(j.skew)])
+
+
+def load_csv_trace(path, archs: Optional[Sequence] = None,
+                   profile: HardwareProfile = TPU_V5E,
+                   tokens_per_iter: int = 1024) -> List[Job]:
+    """Load a trace from CSV.  Accepts the canonical schema written by
+    save_csv_trace, or minimal Philly/Helios-style columns
+    (submit_time/num_gpus/duration [+ model]): jobs without an explicit
+    iteration structure get one derived from the named (or deterministically
+    assigned) architecture at the standard micro-batch, scaled so the
+    ideal runtime equals the recorded duration."""
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    arch_by_name = {cfg.name: cfg for cfg in (archs or [])}
+    arch_list = list(archs or [])
+    jobs = []
+    saw_datetime = False
+    for i, row in enumerate(rows):
+        arrival, was_dt = _parse_time(_col(row, "arrival") or 0.0)
+        saw_datetime = saw_datetime or was_dt
+        g = int(float(_col(row, "n_gpus") or 1))
+        model = _col(row, "model")
+        cfg = arch_by_name.get(model)
+        if cfg is None and arch_list:
+            # unknown or missing model name: deterministically assign one of
+            # ours and RENAME the job to it — a foreign name (e.g. resnet50)
+            # would KeyError later inside CommModel.allreduce_time
+            cfg = arch_list[i % len(arch_list)]
+            model = cfg.name
+        t_iter = _col(row, "compute_time_per_iter")
+        iters = _col(row, "total_iters")
+        if t_iter is not None and iters is not None:
+            t_iter, iters = float(t_iter), int(float(iters))
+        else:
+            if cfg is None:
+                raise ValueError(
+                    f"row {i}: no iteration structure in the CSV and no "
+                    "archs given to derive one from")
+            duration = float(_col(row, "duration") or 3600.0)
+            t_iter = compute_time_per_iter(cfg.n_active_params(),
+                                           tokens_per_iter, profile)
+            iters = max(int(duration / t_iter), 10)
+        skew = _col(row, "skew")
+        if skew is not None:
+            skew = float(skew)
+        else:
+            skew = model_skew(cfg) if cfg is not None else 0.0
+        raw_id = _col(row, "job_id")
+        try:  # Philly ids like 'application_1506638472019_10258' -> row index
+            job_id = int(float(raw_id)) if raw_id is not None else i
+        except ValueError:
+            job_id = i
+        jobs.append(Job(job_id=job_id, model=model or "unknown", n_gpus=g,
+                        total_iters=iters, compute_time_per_iter=t_iter,
+                        arrival=arrival, skew=skew))
+    # datetime-stamped traces: shift so the first submission is t=0
+    # (numeric arrivals pass through untouched — exact round-trip)
+    if saw_datetime and jobs:
+        t0 = min(j.arrival for j in jobs)
+        for j in jobs:
+            j.arrival -= t0
+    # colliding ids (duplicates in the file, or row-index fallbacks hitting
+    # a real numeric id) would corrupt the simulator's job table — renumber
+    # everything by row order in that case
+    if len({j.job_id for j in jobs}) != len(jobs):
+        for i, j in enumerate(jobs):
+            j.job_id = i
+    jobs.sort(key=lambda j: (j.arrival, j.job_id))
+    return jobs

@@ -1,0 +1,23 @@
+"""Experiment orchestration: declarative scenarios, a deterministic
+single-cell runner, and a process-parallel sweep (see docs/experiments.md).
+"""
+from .runner import (  # noqa: F401
+    ARTIFACT_SCHEMA,
+    artifact_json,
+    run_one,
+    run_one_timed,
+)
+from .scenario import (  # noqa: F401
+    SCENARIOS,
+    ContentionSchedule,
+    Scenario,
+    get_scenario,
+    register,
+    scenario_from_csv,
+)
+
+def __getattr__(name):  # lazy: `python -m repro.experiments.sweep` must not
+    if name == "sweep":  # find the submodule pre-imported in sys.modules
+        from . import sweep
+        return sweep
+    raise AttributeError(name)

@@ -1,0 +1,69 @@
+"""Run one (scenario, policy, seed) cell and emit the v1 artifact.
+
+The artifact is the single JSON schema every figure/table consumes.  It is
+fully deterministic — wall-clock timing lives outside it (sweep index) so
+identical runs produce byte-identical files regardless of worker count.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Optional, Union
+
+from repro.core import CommModel
+
+from .scenario import Scenario, get_scenario
+
+ARTIFACT_SCHEMA = "repro.experiments.artifact/v1"
+
+# volatile keys excluded from determinism comparisons (populated by callers,
+# never by run_one itself)
+VOLATILE_KEYS = ("wall_s",)
+
+
+def _archs():
+    from repro.configs import ARCHS
+    return list(ARCHS.values())
+
+
+def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
+            seed: int = 0, *, n_racks: Optional[int] = None,
+            n_jobs: Optional[int] = None, max_time: Optional[float] = None,
+            comm: Optional[CommModel] = None, archs=None) -> dict:
+    """Simulate one cell and return the artifact dict.
+
+    ``n_racks`` / ``n_jobs`` / ``max_time`` override the scenario (rack-count
+    sweeps, --small benchmark modes); ``comm`` lets callers inject a shared
+    or calibrated communication model.
+    """
+    if isinstance(scenario, str):
+        scenario = get_scenario(scenario)
+    scenario = scenario.with_overrides(n_racks=n_racks, n_jobs=n_jobs,
+                                       max_time=max_time)
+    archs = archs if archs is not None else _archs()
+    policy = policy or scenario.policy
+    sim = scenario.build_sim(archs, policy=policy, seed=seed, comm=comm)
+    metrics = sim.run(max_time=scenario.max_time)
+    return {
+        "schema": ARTIFACT_SCHEMA,
+        "scenario": scenario.name,
+        "policy": policy,
+        "seed": seed,
+        "config": scenario.config_dict(),
+        "metrics": metrics,
+    }
+
+
+def run_one_timed(*args, **kw) -> dict:
+    """run_one + wall-clock timing under the volatile 'wall_s' key."""
+    t0 = time.time()
+    art = run_one(*args, **kw)
+    art["wall_s"] = time.time() - t0
+    return art
+
+
+def artifact_json(artifact: dict) -> str:
+    """Canonical serialization (sorted keys) minus volatile fields — two
+    identical runs produce byte-identical output."""
+    clean = {k: v for k, v in artifact.items() if k not in VOLATILE_KEYS}
+    return json.dumps(clean, indent=1, sort_keys=True)

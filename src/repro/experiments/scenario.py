@@ -1,0 +1,266 @@
+"""Declarative experiment scenarios.
+
+A ``Scenario`` is one simulated workload regime: cluster shape (possibly
+heterogeneous racks), network regime (hardware profile, per-tier contention,
+machine-slowdown schedules), trace kind + parameters, and default policy /
+simulator knobs.  Scenarios are pure data — the same (scenario, policy,
+seed) triple always builds the same simulation, which is what makes the
+parallel sweep runner deterministic.
+
+Named scenarios live in ``SCENARIOS``; add one with ``register`` (see
+docs/experiments.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from repro.types import PROFILES
+from repro.core import (
+    ClusterSimulator,
+    ClusterTopology,
+    CommModel,
+    load_csv_trace,
+    make_batch_trace,
+    make_bursty_trace,
+    make_mixed_trace,
+    make_poisson_trace,
+)
+from repro.core.policies import make_policy
+
+TRACE_MAKERS = {
+    "batch": make_batch_trace,
+    "poisson": make_poisson_trace,
+    "bursty": make_bursty_trace,
+    "mixed": make_mixed_trace,
+}
+
+
+@dataclass(frozen=True)
+class ContentionSchedule:
+    """Recurring background network contention: every ``period`` seconds a
+    random ``scope`` fraction of machines slows down by ``factor`` for
+    ``duty * period`` seconds (co-located inference traffic, maintenance
+    mirrors, bulk transfers...).  Expanded deterministically from the run
+    seed into the simulator's machine-slowdown events."""
+    period: float = 6 * 3600.0
+    duty: float = 0.25
+    factor: float = 2.0
+    scope: float = 0.25
+    horizon: float = 14 * 24 * 3600.0
+
+    def events(self, machine_ids, seed: int):
+        """machine_ids: ids of machines that actually hold GPUs (excludes
+        the empty stride slots of heterogeneous topologies, which would
+        silently shrink the effective contention scope)."""
+        import random
+        machine_ids = list(machine_ids)
+        rng = random.Random(seed + 40_000)
+        out = []
+        t = 0.0
+        while t < self.horizon:
+            k = max(1, int(self.scope * len(machine_ids)))
+            for m in rng.sample(machine_ids, k):
+                out.append((t, m, self.factor))
+                out.append((t + self.duty * self.period, m, 1.0))
+            t += self.period
+        return out
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str = ""
+    # cluster shape
+    n_racks: int = 8
+    machines_per_rack: int = 8
+    gpus_per_machine: int = 8
+    rack_sizes: Optional[Tuple[int, ...]] = None  # heterogeneous racks
+    # network regime
+    profile: str = "tpu_v5e"
+    bandwidth_scale: Mapping[str, float] = field(default_factory=dict)
+    overlap_frac: float = 0.25
+    slowdown_events: Tuple[Tuple[float, int, float], ...] = ()
+    contention: Optional[ContentionSchedule] = None
+    # workload
+    trace: str = "batch"  # batch | poisson | bursty | mixed | csv
+    n_jobs: int = 500
+    trace_kw: Mapping[str, Any] = field(default_factory=dict)
+    csv_path: Optional[str] = None
+    # defaults for the simulation
+    policy: str = "dally"
+    round_period: float = 300.0
+    max_time: float = math.inf
+
+    # -- builders -------------------------------------------------------
+    def with_overrides(self, **kw) -> "Scenario":
+        """A copy with the given fields replaced (None values ignored).
+        An explicit n_racks override wins over heterogeneous rack_sizes —
+        the result is a uniform cluster of that many racks (otherwise the
+        override would be silently ignored while still being recorded in
+        the artifact's provenance)."""
+        kw = {k: v for k, v in kw.items() if v is not None}
+        if kw.get("n_racks") is not None and self.rack_sizes is not None:
+            kw.setdefault("rack_sizes", None)
+        return dataclasses.replace(self, **kw) if kw else self
+
+    def build_cluster(self) -> ClusterTopology:
+        if self.rack_sizes is not None:
+            return ClusterTopology(machines_per_rack=self.machines_per_rack,
+                                   gpus_per_machine=self.gpus_per_machine,
+                                   rack_sizes=self.rack_sizes)
+        return ClusterTopology(n_racks=self.n_racks,
+                               machines_per_rack=self.machines_per_rack,
+                               gpus_per_machine=self.gpus_per_machine)
+
+    def build_comm(self, archs, calibration=None) -> CommModel:
+        profile = PROFILES[self.profile]
+        if self.bandwidth_scale:
+            # contended network regime: scale per-tier usable bandwidth
+            tiers = tuple(
+                dataclasses.replace(
+                    t, bandwidth=t.bandwidth * self.bandwidth_scale.get(t.name, 1.0))
+                for t in profile.tiers)
+            profile = dataclasses.replace(profile, tiers=tiers)
+        return CommModel.from_configs(archs, profile=profile,
+                                      overlap_frac=self.overlap_frac,
+                                      calibration=calibration)
+
+    def build_trace(self, archs, seed: int):
+        if self.trace == "csv":
+            if not self.csv_path:
+                raise ValueError(
+                    f"scenario {self.name!r} replays a CSV trace; set "
+                    "csv_path (e.g. Scenario.with_overrides(csv_path=...) "
+                    "or sweep --csv)")
+            return load_csv_trace(self.csv_path, archs, **dict(self.trace_kw))
+        maker = TRACE_MAKERS[self.trace]
+        return maker(archs, n_jobs=self.n_jobs, seed=seed,
+                     **dict(self.trace_kw))
+
+    def build_sim(self, archs, policy: Optional[str] = None, seed: int = 0,
+                  comm: Optional[CommModel] = None) -> ClusterSimulator:
+        cluster = self.build_cluster()
+        events = list(self.slowdown_events)
+        if self.contention is not None:
+            real = [m for m in range(cluster.n_machines)
+                    if cluster.free[m] > 0]  # pre-allocation: full capacity
+            events += self.contention.events(real, seed)
+        sim = ClusterSimulator(cluster,
+                               make_policy(policy or self.policy),
+                               comm or self.build_comm(archs),
+                               round_period=self.round_period,
+                               slowdown_events=events or None)
+        for job in self.build_trace(archs, seed):
+            sim.submit(job)
+        return sim
+
+    def config_dict(self) -> Dict[str, Any]:
+        """JSON-serializable scenario description (artifact provenance)."""
+        return {
+            "n_racks": self.n_racks,
+            "machines_per_rack": self.machines_per_rack,
+            "gpus_per_machine": self.gpus_per_machine,
+            "rack_sizes": list(self.rack_sizes) if self.rack_sizes else None,
+            "profile": self.profile,
+            "bandwidth_scale": dict(self.bandwidth_scale),
+            "overlap_frac": self.overlap_frac,
+            "n_slowdown_events": len(self.slowdown_events),
+            "contention": (dataclasses.asdict(self.contention)
+                           if self.contention else None),
+            "trace": self.trace,
+            "n_jobs": self.n_jobs,
+            "trace_kw": dict(self.trace_kw),
+            "csv_path": self.csv_path,
+            "policy": self.policy,
+            "round_period": self.round_period,
+            "max_time": (None if math.isinf(self.max_time)
+                         else self.max_time),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; known: "
+                       f"{', '.join(sorted(SCENARIOS))}") from None
+
+
+def scenario_from_csv(path: str, name: str = "csv-replay", **kw) -> Scenario:
+    return Scenario(name=name, trace="csv", csv_path=path,
+                    description=f"replay of {path}", **kw)
+
+
+# -- the paper's regimes (§V-A) ---------------------------------------------
+register(Scenario(
+    "paper-batch",
+    description="500 jobs, all at t=0, congested cluster (Figs. 7-9)",
+    trace="batch", n_jobs=500))
+register(Scenario(
+    "paper-poisson",
+    description="400 jobs, Poisson arrivals at peak load (Fig. 10, Tbl III)",
+    trace="poisson", n_jobs=400))
+register(Scenario(
+    "demo",
+    description="examples/cluster_scheduling.py scale: 200 jobs, 4 racks",
+    n_racks=4, trace="batch", n_jobs=200))
+register(Scenario(
+    "smoke",
+    description="CI-sized: 60 jobs on 2 racks, finishes in <1s per policy",
+    n_racks=2, trace="batch", n_jobs=60))
+
+# -- beyond the paper --------------------------------------------------------
+register(Scenario(
+    "hetero-racks",
+    description="heterogeneous rack sizes (8/8/6/4/2/2 machines): "
+    "consolidation targets differ per rack",
+    rack_sizes=(8, 8, 6, 4, 2, 2), trace="batch", n_jobs=400))
+register(Scenario(
+    "contended-network",
+    description="rack/network bandwidth halved/quartered by background "
+    "traffic + recurring per-machine contention windows",
+    bandwidth_scale={"rack": 0.5, "network": 0.25},
+    contention=ContentionSchedule(),
+    trace="batch", n_jobs=400))
+register(Scenario(
+    "bursty-diurnal",
+    description="diurnal arrival rate (4x day/night swing), no flash crowds",
+    trace="bursty", n_jobs=400,
+    trace_kw={"flash_crowds": 0, "peak_to_trough": 4.0}))
+register(Scenario(
+    "flash-crowd",
+    description="diurnal base + 40% of jobs in 3 ten-minute flash crowds",
+    trace="bursty", n_jobs=400,
+    trace_kw={"flash_crowds": 3, "flash_fraction": 0.4}))
+register(Scenario(
+    "datacenter-mix",
+    description="Helios-style mix: many small short jobs + a 15% tail of "
+    "16-128 GPU production jobs (128 > one rack)",
+    trace="mixed", n_jobs=400))
+register(Scenario(
+    "straggler",
+    description="paper-batch with 3x slowdown on four machines from t=0 "
+    "(straggler tolerance)",
+    trace="batch", n_jobs=400,
+    slowdown_events=((0.0, 0, 3.0), (0.0, 1, 3.0),
+                     (0.0, 2, 3.0), (0.0, 3, 3.0))))
+register(Scenario(
+    "csv-replay",
+    description="replay an external Philly/Helios-style CSV (needs "
+    "csv_path override / sweep --csv)",
+    trace="csv", n_jobs=0))

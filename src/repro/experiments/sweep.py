@@ -1,0 +1,148 @@
+"""Parallel experiment sweep runner.
+
+Fans (scenario x policy x seed) cells across worker processes and writes one
+deterministic JSON artifact per cell plus a sweep index:
+
+    python -m repro.experiments.sweep \
+        --scenarios paper-batch,paper-poisson \
+        --policies dally,tiresias,gandiva --seeds 3 --workers 4
+
+Determinism: each cell is rebuilt from (scenario, policy, seed) alone inside
+its worker, and artifacts exclude wall-clock timing, so per-cell files are
+byte-identical whatever the worker count or scheduling order.  Timing lives
+in the index (``sweep.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing as mp
+import pathlib
+import time
+from concurrent.futures import ProcessPoolExecutor
+from typing import List, Optional, Sequence, Tuple
+
+from .runner import artifact_json, run_one
+from .scenario import SCENARIOS, get_scenario, scenario_from_csv
+
+DEFAULT_OUT = pathlib.Path("benchmarks") / "artifacts" / "sweep"
+
+Task = Tuple[str, Optional[str], str, int, dict]  # scenario, csv, policy, seed, overrides
+
+
+def _cell_name(scenario: str, policy: str, seed: int) -> str:
+    return f"{scenario}__{policy}__seed{seed}.json"
+
+
+def _run_cell(task: Task, out_dir: str) -> dict:
+    """Worker entry: simulate one cell, write its artifact, return a summary
+    row for the index (artifacts stay on disk; only headlines travel back)."""
+    scenario_name, csv_path, policy, seed, overrides = task
+    t0 = time.time()
+    if csv_path:
+        scenario = scenario_from_csv(csv_path, name=scenario_name)
+    else:
+        scenario = get_scenario(scenario_name)
+    art = run_one(scenario, policy=policy, seed=seed, **overrides)
+    path = pathlib.Path(out_dir) / _cell_name(scenario_name, policy, seed)
+    path.write_text(artifact_json(art))
+    m = art["metrics"]
+    return {
+        "file": path.name,
+        "scenario": scenario_name,
+        "policy": policy,
+        "seed": seed,
+        "makespan": m["makespan"],
+        "avg_jct": m["jct"]["avg"],
+        "p99_jct": m["jct"]["p99"],
+        "avg_utilization": m["avg_utilization"],
+        "n_finished": m["n_finished"],
+        "wall_s": time.time() - t0,
+    }
+
+
+def sweep(scenarios: Sequence[str], policies: Sequence[str],
+          seeds: Sequence[int], *, workers: int = 1,
+          out_dir=DEFAULT_OUT, csv: Optional[str] = None,
+          n_jobs: Optional[int] = None, n_racks: Optional[int] = None,
+          max_time: Optional[float] = None) -> dict:
+    """Run the full cross product and return the index dict."""
+    out_dir = pathlib.Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    overrides = {"n_jobs": n_jobs, "n_racks": n_racks, "max_time": max_time}
+    tasks: List[Task] = [
+        (sc, csv if (csv and get_scenario(sc).trace == "csv") else None,
+         pol, seed, overrides)
+        for sc in scenarios for pol in policies for seed in seeds]
+    t0 = time.time()
+    if workers > 1:
+        # spawn: workers re-import cleanly (no forked JAX/threading state),
+        # which also guarantees identical artifacts at any worker count
+        ctx = mp.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as ex:
+            rows = list(ex.map(_run_cell, tasks,
+                               [str(out_dir)] * len(tasks)))
+    else:
+        rows = [_run_cell(t, str(out_dir)) for t in tasks]
+    index = {
+        "schema": "repro.experiments.sweep/v1",
+        "scenarios": list(scenarios),
+        "policies": list(policies),
+        "seeds": list(seeds),
+        "overrides": {k: v for k, v in overrides.items() if v is not None},
+        "runs": rows,
+        "total_wall_s": time.time() - t0,
+        "workers": workers,
+    }
+    (out_dir / "sweep.json").write_text(json.dumps(index, indent=1))
+    return index
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Parallel (scenario x policy x seed) experiment sweep")
+    ap.add_argument("--scenarios", default="paper-batch",
+                    help="comma-separated scenario names (see --list)")
+    ap.add_argument("--policies", default="dally,tiresias,gandiva")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="number of seeds (0..N-1)")
+    ap.add_argument("--seed-list", default=None,
+                    help="explicit comma-separated seeds (overrides --seeds)")
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--csv", default=None,
+                    help="CSV trace path for csv-replay scenarios")
+    ap.add_argument("--n-jobs", type=int, default=None,
+                    help="override every scenario's job count")
+    ap.add_argument("--racks", type=int, default=None,
+                    help="override every scenario's rack count")
+    ap.add_argument("--max-time", type=float, default=None,
+                    help="truncate runs at this simulated time (seconds)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        width = max(len(n) for n in SCENARIOS)
+        for name in sorted(SCENARIOS):
+            print(f"{name:{width}s}  {SCENARIOS[name].description}")
+        return
+
+    seeds = ([int(s) for s in args.seed_list.split(",")]
+             if args.seed_list else list(range(args.seeds)))
+    index = sweep(
+        [s for s in args.scenarios.split(",") if s],
+        [p for p in args.policies.split(",") if p],
+        seeds, workers=args.workers, out_dir=args.out, csv=args.csv,
+        n_jobs=args.n_jobs, n_racks=args.racks, max_time=args.max_time)
+    for r in index["runs"]:
+        print(f"{r['scenario']:>18s} {r['policy']:>22s} seed{r['seed']} "
+              f"makespan={r['makespan']/3600:8.1f}h "
+              f"avg_jct={r['avg_jct']/3600:7.2f}h "
+              f"util={r['avg_utilization']:4.2f} wall={r['wall_s']:5.1f}s")
+    print(f"sweep.total_wall_seconds,{index['total_wall_s']:.1f},"
+          f"workers={index['workers']} cells={len(index['runs'])}")
+
+
+if __name__ == "__main__":
+    main()

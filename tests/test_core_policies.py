@@ -88,6 +88,34 @@ def test_tiresias_skew_consolidates():
     assert pol.on_offer(lo, sim, now=0.0) == "scatter"  # takes fragments
 
 
+def test_algo1_oversized_jobs_never_granted_small_tiers():
+    """Explicit capacity guards: a job that can never fit a machine (or a
+    rack) must not be offered that tier, no matter the timer state."""
+    sim = _sim(racks=2)
+    # timers zero = most permissive: without guards this is the config in
+    # which an impossible tier could slip through
+    pol = make_policy("dally-nowait")
+    assert pol.on_offer(_job(g=16), sim, now=0.0) == "rack"
+    assert pol.on_offer(_job(g=128), sim, now=0.0) == "network"
+    # tuned-policy path takes the same guards
+    pol = make_policy("dally")
+    assert pol.on_offer(_job(g=128), sim, now=0.0) == "network"
+
+
+def test_job_larger_than_one_rack_completes():
+    """Regression: a job spanning multiple racks (g > rack capacity) is
+    placed at network tier and runs to completion instead of waiting on a
+    rack that can never hold it."""
+    sim = _sim(racks=2)
+    big = _job(g=100)
+    big.total_iters = 50
+    sim.submit(big)
+    res = sim.run()
+    assert res["n_finished"] == 1
+    assert sim.finished[0].placement is None
+    assert sim.cluster.free_gpus() == sim.cluster.total_gpus
+
+
 def test_nw_sens_ordering():
     """A job slowed by the network ranks before one running at full speed."""
     fast = _job(); fast.t_run = 100.0; fast.iters_done = 300

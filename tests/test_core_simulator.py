@@ -84,6 +84,28 @@ def test_preemption_resumes_progress():
         assert j.iters_done == j.total_iters  # nothing lost
 
 
+def test_max_time_truncation_accounts_running_jobs():
+    """Regression: truncating a run with max_time must fold the in-flight
+    jobs' progress into t_run/comm_time instead of dropping it."""
+    horizon = 4 * 3600.0
+    jobs = make_batch_trace(ARCHS_L, n_jobs=30, seed=3)
+    sim = ClusterSimulator(ClusterTopology(n_racks=1),
+                           make_policy("dally"), COMM)
+    for j in jobs:
+        sim.submit(j)
+    res = sim.run(max_time=horizon)
+    assert res["n_finished"] < 30 and sim.running
+    assert sim.running, "expected in-flight jobs at the horizon"
+    # progress accounted, not dropped (a job mid-restore may still be at 0)
+    assert any(j.t_run > 0.0 for j in sim.running)
+    for j in sim.running:
+        assert j.run_start == horizon  # accounted exactly up to the horizon
+        assert j.iters_done <= j.total_iters
+    finished_t_run = sum(j.t_run for j in sim.finished)
+    assert res["total_t_run"] > finished_t_run
+    assert res["n_unfinished"] == 30 - res["n_finished"]
+
+
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 100), racks=st.sampled_from([1, 2]))
 def test_capacity_never_oversubscribed_property(seed, racks):
