@@ -4,6 +4,8 @@ Components (paper §IV):
   topology    — hierarchical cluster (machine / rack / network tiers)
   commmodel   — per-placement communication latency (ASTRA-sim analogue,
                 calibrated against this repo's compiled dry-run collectives)
+  fabric      — shared rack-uplink/spine fabric: cross-job fair-share
+                bandwidth (endogenous contention)
   simulator   — event-driven multi-job cluster simulator (ArtISt-sim analogue)
   autotuner   — delay-timer auto-tuning from starvation-time history (Algo 2)
   policies    — Dally (Algo 1 + Nw_sens preemption), Tiresias, Gandiva,
@@ -13,6 +15,7 @@ Components (paper §IV):
 """
 from .autotuner import AutoTuner  # noqa: F401
 from .commmodel import CommModel  # noqa: F401
+from .fabric import FairShareFabric  # noqa: F401
 from .job import Job  # noqa: F401
 from .metrics import summarize  # noqa: F401
 from .simulator import ClusterSimulator  # noqa: F401

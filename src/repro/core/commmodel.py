@@ -87,23 +87,30 @@ class CommModel:
         self._ar_cache.clear()  # calibration changes the cached latencies
 
     # -- core latency model ---------------------------------------------
-    def _ring(self, bytes_, n, tier_name, n_buckets):
+    def _ring(self, bytes_, n, tier_name, n_buckets, bw_override=None):
         if n <= 1:
             return 0.0
         t = self.profile.tier(tier_name)
-        bw_time = 2.0 * (n - 1) / n * bytes_ / t.bandwidth
+        bw = t.bandwidth if bw_override is None else bw_override
+        bw_time = 2.0 * (n - 1) / n * bytes_ / bw
         lat_time = 2.0 * (n - 1) * t.latency * n_buckets
         return bw_time + lat_time
 
     def allreduce_time(self, model: str, placement: Placement,
                        machines_per_rack: int,
-                       gpus_per_machine: int) -> float:
-        """Hierarchical all-reduce time for one iteration's gradients."""
+                       gpus_per_machine: int,
+                       internode_bw: Optional[float] = None) -> float:
+        """Hierarchical all-reduce time for one iteration's gradients.
+
+        ``internode_bw`` overrides the inter-node stage's bandwidth (the
+        shared-fabric fair share of a contended placement); per-hop
+        latency and the intra-machine stage are unaffected.
+        """
         tier = placement.tier(machines_per_rack)
         n_machines = len(placement.alloc)
         n_gpus = placement.n_gpus
         max_local = max(c for _, c in placement.alloc)
-        key = (model, tier, n_gpus, n_machines, max_local)
+        key = (model, tier, n_gpus, n_machines, max_local, internode_bw)
         if self.cache_size:
             hit = self._ar_cache.get(key)
             if hit is not None:
@@ -122,19 +129,25 @@ class CommModel:
             # stage 1: reduce within each machine (max gpus on one machine)
             t = self._ring(M, max_local, "machine", L)
             # stage 2: ring across machine leaders at the bottleneck tier
-            t += self._ring(M, n_machines, tier, L)
+            t += self._ring(M, n_machines, tier, L,
+                            bw_override=internode_bw)
         if self.cache_size:
-            if len(self._ar_cache) >= self.cache_size:
-                self._ar_cache.clear()
+            while len(self._ar_cache) >= self.cache_size:
+                # bounded FIFO eviction (dicts preserve insertion order):
+                # dropping only the oldest entry keeps the hot keys of a
+                # long sweep cached instead of cold-starting everything
+                self._ar_cache.pop(next(iter(self._ar_cache)))
             self._ar_cache[key] = t
         return t
 
     def iteration_time(self, model: str, compute_time: float,
                        placement: Placement, machines_per_rack: int,
-                       gpus_per_machine: int):
+                       gpus_per_machine: int,
+                       internode_bw: Optional[float] = None):
         """Returns (iter_time, exposed_comm_per_iter)."""
         t_comm = self.allreduce_time(model, placement, machines_per_rack,
-                                     gpus_per_machine)
+                                     gpus_per_machine,
+                                     internode_bw=internode_bw)
         exposed = max(0.0, t_comm - self.overlap_frac * compute_time)
         return compute_time + exposed, exposed
 
@@ -153,7 +166,10 @@ class CommModel:
 
     @staticmethod
     def _canonical_placement(g, tier, machines_per_rack, gpus_per_machine):
-        if tier == "machine":
+        if tier == "machine" or g <= 1:
+            # a single GPU does no all-reduce at any tier; the rack/network
+            # splits below would emit a zero-GPU machine entry ((1, 0)) that
+            # counts as a second ring participant and skews sensitivity_pct
             return Placement(((0, g),))
         if tier == "rack":
             per = max(1, g // 2)

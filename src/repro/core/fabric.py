@@ -1,0 +1,78 @@
+"""Endogenous cross-job network contention: the shared-fabric model.
+
+The cluster's inter-rack fabric is a two-level tree — every rack has one
+uplink into a single spine.  A cross-rack (network-tier) placement's
+all-reduce ring traverses the uplink of each rack it spans plus the
+spine; placements that share a link split its capacity equally.  A job's
+effective inter-node bandwidth is therefore
+
+    bw(j) = min( nic_bw,  min over links l of  capacity(l) / n_users(l) )
+
+i.e. the per-participant NIC rate capped by the job's most contended
+link's fair share.  Machine- and rack-tier placements never leave the
+ToR switch and are unaffected — which is exactly why consolidation pays
+off under congestion (the regime of Wang et al., arXiv:2002.10105, and
+Ryu & Eo, arXiv:2310.20209).
+
+Link capacities come from the topology (``rack_uplink_bw`` /
+``spine_bw``); when unset, uncontended defaults of 4x (uplink) and 8x
+(spine) the NIC rate apply, so up to 4 jobs per uplink and 8 across the
+spine run at full speed before fair-sharing bites.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+from .topology import ClusterTopology
+
+# default link capacities as multiples of the per-participant NIC rate
+DEFAULT_UPLINK_X = 4.0
+DEFAULT_SPINE_X = 8.0
+
+
+class FairShareFabric:
+    """Computes per-job inter-node bandwidth under equal-share contention.
+
+    ``nic_bw`` is the per-participant network-tier bandwidth from the
+    hardware profile — the ceiling a job sees on an empty fabric, which
+    keeps the model exactly backward-compatible when nothing contends.
+    """
+
+    def __init__(self, cluster: ClusterTopology, nic_bw: float,
+                 rack_uplink_bw: Optional[float] = None,
+                 spine_bw: Optional[float] = None):
+        assert nic_bw > 0
+        self.cluster = cluster
+        self.nic_bw = nic_bw
+        self.rack_uplink_bw = (rack_uplink_bw
+                               if rack_uplink_bw is not None
+                               else cluster.rack_uplink_bw)
+        if self.rack_uplink_bw is None:
+            self.rack_uplink_bw = DEFAULT_UPLINK_X * nic_bw
+        self.spine_bw = spine_bw if spine_bw is not None else cluster.spine_bw
+        if self.spine_bw is None:
+            self.spine_bw = DEFAULT_SPINE_X * nic_bw
+
+    def _capacity(self, link) -> float:
+        return self.spine_bw if link == self.cluster.SPINE \
+            else self.rack_uplink_bw
+
+    def fair_shares(self, jobs: Iterable) -> Dict[int, float]:
+        """job_id -> effective inter-node bandwidth for every cross-rack
+        job in ``jobs`` (jobs whose traffic stays under one ToR are
+        absent: they run at the profile's tier rate, uncontended)."""
+        links_of: Dict[int, tuple] = {}
+        users: Dict[tuple, int] = {}
+        for job in jobs:
+            links = self.cluster.placement_links(job.placement)
+            if not links:
+                continue
+            links_of[job.job_id] = links
+            for link in links:
+                users[link] = users.get(link, 0) + 1
+        return {
+            jid: min(self.nic_bw,
+                     min(self._capacity(link) / users[link]
+                         for link in links))
+            for jid, links in links_of.items()
+        }

@@ -32,6 +32,8 @@ class Job:
     comm_time: float = 0.0       # exposed communication time accumulated
     placement: Optional[Placement] = None
     iter_time: float = 0.0       # current per-iteration time (w/ comm)
+    slow_factor: float = 1.0     # machine-slowdown factor of this placement
+    iters_frac: float = 0.0      # partial iteration carried across re-prices
     run_start: float = 0.0       # when the current run segment started
     last_assignment_time: Optional[float] = None  # for T_starvation
     wait_since: float = 0.0      # when the job (re)entered the wait queue

@@ -1,6 +1,6 @@
 from .base import Policy  # noqa: F401
 from .dally import DallyPolicy  # noqa: F401
-from .gandiva import GandivaPolicy  # noqa: F401
+from .gandiva import GandivaPolicy, ScatterPolicy  # noqa: F401
 from .tiresias import TiresiasPolicy  # noqa: F401
 from .variants import (  # noqa: F401
     DallyFullyConsolidatedPolicy,
@@ -15,6 +15,7 @@ POLICIES = {
     "dally-fullyconsolidated": DallyFullyConsolidatedPolicy,
     "tiresias": TiresiasPolicy,
     "gandiva": GandivaPolicy,
+    "scatter": ScatterPolicy,
 }
 
 

@@ -1,5 +1,11 @@
 """Dally (paper §IV-B): delay scheduling (Algo 1) + Nw_sens preemption
-priority + auto-tuned delay timers (Algo 2)."""
+priority + auto-tuned delay timers (Algo 2).
+
+Under a shared fabric (endogenous cross-job contention) Nw_sens reacts to
+*live* congestion with no extra machinery: fair-share re-pricing slows a
+contended job's iteration progress, which lowers its W_compl/T_norm ratio,
+which moves it to the front of the offer/upgrade order — so the policy
+automatically favors exactly the jobs the fabric is currently throttling."""
 from __future__ import annotations
 
 from repro.core.autotuner import AutoTuner

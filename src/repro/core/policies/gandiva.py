@@ -28,6 +28,9 @@ class GandivaPolicy(Policy):
     def on_round(self, sim, now):
         if not self.migrate:
             return
+        # NB: under a shared fabric (endogenous contention) migrations also
+        # change the contending set; the simulator re-prices every affected
+        # running job after the round
         # migrate at most one job per round to a strictly better tier
         order = {"machine": 0, "rack": 1, "network": 2}
         best = None
@@ -46,3 +49,16 @@ class GandivaPolicy(Policy):
             sim.cluster.retake(job.placement)
         if best is not None:
             sim.migrate(best[0], best[1], now)
+
+
+class ScatterPolicy(GandivaPolicy):
+    """Pure network-agnostic scatter: Gandiva minus its introspective
+    migration.  Placements take whatever fragments are free and never
+    improve — the baseline that endogenous shared-fabric contention
+    punishes hardest (scattered cross-rack jobs fair-share the spine and
+    throttle each other), and the foil for the paper's "under congested
+    networking conditions" headline claims."""
+    name = "scatter"
+
+    def __init__(self):
+        super().__init__(migrate=False)

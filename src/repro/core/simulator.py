@@ -10,13 +10,21 @@ Events: job arrival, scheduling round (period `round_period`), job
 completion, optional machine-slowdown (straggler) events.  Preemption saves
 (iters_done, optimizer state) and restores after `restore_time` — the paper's
 checkpoint/resume contract (§IV-B).
+
+With a shared-fabric model attached (``fabric``), jobs endogenously slow
+each other down: whenever the set of cross-rack placements changes
+(start / complete / preempt / migrate), every affected running job's
+iteration time is re-priced at its new fair-share bandwidth — in-flight
+progress at the old rate is folded in, and the job's COMPLETE event is
+re-pushed through the existing versioning mechanism.
 """
 from __future__ import annotations
 
 import heapq
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from .commmodel import CommModel
+from .fabric import FairShareFabric
 from .job import Job
 from .metrics import Timeline
 from .topology import ClusterTopology
@@ -29,7 +37,9 @@ class ClusterSimulator:
                  *, round_period: float = 300.0, restore_time: float = 30.0,
                  preemption_min_runtime: float = 1800.0,
                  max_preemptions_per_round: int = 4,
-                 slowdown_events: Optional[List] = None):
+                 slowdown_events: Optional[List] = None,
+                 fabric: Optional[FairShareFabric] = None,
+                 event_hook: Optional[Callable] = None):
         self.cluster = cluster
         self.policy = policy
         self.comm = comm
@@ -37,6 +47,13 @@ class ClusterSimulator:
         self.restore_time = restore_time
         self.preemption_min_runtime = preemption_min_runtime
         self.max_preemptions_per_round = max_preemptions_per_round
+        self.fabric = fabric
+        # event_hook(sim, event_kind) runs after every processed event —
+        # a debugging/testing seam (the invariant test-suite's probe); it
+        # must not mutate the simulation
+        self.event_hook = event_hook
+        self._fabric_dirty = False
+        self.n_reprices = 0
 
         self.clock = 0.0
         self.events: List = []
@@ -89,9 +106,17 @@ class ClusterSimulator:
             f = max(f, self.machine_slowdown.get(m, 1.0))
         return f
 
+    def _touch_fabric(self, placement):
+        """Mark the fabric contending-set dirty if `placement` shares any
+        link (machine-/rack-tier placements never contend)."""
+        if (self.fabric is not None and not self._fabric_dirty
+                and self.cluster.placement_links(placement)):
+            self._fabric_dirty = True
+
     def _start(self, job: Job, level: str, now: float):
         placement = self.cluster.allocate(job.n_gpus, level)
         assert placement is not None, (job.job_id, level)
+        self._touch_fabric(placement)
         tier = placement.tier(self.cluster.machines_per_rack)
         self.policy.record_acceptance(job, tier, now)
         job.t_queue += now - job.wait_since
@@ -99,9 +124,14 @@ class ClusterSimulator:
         it, exposed = self.comm.iteration_time(
             job.model, job.compute_time_per_iter, placement,
             self.cluster.machines_per_rack, self.cluster.gpus_per_machine)
-        it *= self._slow_factor(placement)
+        # the slowdown factor is pinned at placement time (v1 semantics:
+        # SLOWDOWN events only affect newly placed jobs); fabric re-pricing
+        # reuses the pinned value so contention on/off stays a clean A/B
+        job.slow_factor = self._slow_factor(placement)
+        it *= job.slow_factor
         job.iter_time = it
         job.exposed_comm_per_iter = exposed
+        job.iters_frac = 0.0  # a fresh placement restarts its iteration
         restore = self.restore_time if job.started_once else 0.0
         job.run_start = now + restore
         job.started_once = True
@@ -125,6 +155,7 @@ class ClusterSimulator:
 
     def preempt(self, job: Job, now: float):
         self._progress(job, now)
+        self._touch_fabric(job.placement)
         self.cluster.release(job.placement)
         job.placement = None
         job.preemptions += 1
@@ -233,6 +264,50 @@ class ClusterSimulator:
                         made_progress = True
 
     # ------------------------------------------------------------------
+    def _reprice(self, now: float):
+        """Shared-fabric re-pricing: the cross-rack contending set changed,
+        so recompute every running job's fair-share bandwidth and re-push
+        the COMPLETE event of each job whose iteration time changed.
+
+        Progress at the old rate is folded in exactly: the in-flight
+        *partial* iteration is carried in ``iters_frac`` and scales over to
+        the new rate (a repriced job never stopped running, so unlike
+        preemption it must not re-do its current iteration).  A job
+        mid-restore keeps its future ``run_start`` (its restore delay must
+        survive re-pricing) and simply resumes at the new rate.  The
+        machine-slowdown factor pinned at placement time is reused — v1
+        semantics apply SLOWDOWN events only to new placements, and fabric
+        churn must not retroactively change that."""
+        shares = self.fabric.fair_shares(self.running)
+        for job in self.running:
+            it, exposed = self.comm.iteration_time(
+                job.model, job.compute_time_per_iter, job.placement,
+                self.cluster.machines_per_rack,
+                self.cluster.gpus_per_machine,
+                internode_bw=shares.get(job.job_id))
+            it *= job.slow_factor
+            if it == job.iter_time:
+                continue
+            if now > job.run_start:
+                elapsed = now - job.run_start
+                done_f = elapsed / job.iter_time + job.iters_frac
+                whole = min(int(done_f), job.remaining_iters())
+                job.iters_done += whole
+                job.t_run += elapsed
+                job.comm_time += whole * job.exposed_comm_per_iter
+                job.iters_frac = (done_f - whole if job.remaining_iters()
+                                  else 0.0)
+                job.run_start = now
+            job.iter_time = it
+            job.exposed_comm_per_iter = exposed
+            v = self._completion_version[job.job_id] + 1
+            self._completion_version[job.job_id] = v
+            remaining = max(job.remaining_iters() - job.iters_frac, 0.0)
+            self._push(max(job.run_start, now) + remaining * it,
+                       COMPLETE, (job.job_id, v))
+            self.n_reprices += 1
+
+    # ------------------------------------------------------------------
     def run(self, max_time: float = float("inf")) -> Dict:
         self._push(0.0, ROUND, None)
         while self.events:
@@ -273,6 +348,7 @@ class ClusterSimulator:
                 self._progress(job, t)
                 job.iters_done = job.total_iters
                 job.finish_time = t
+                self._touch_fabric(job.placement)
                 self.cluster.release(job.placement)
                 job.placement = None
                 self.running.remove(job)
@@ -281,6 +357,11 @@ class ClusterSimulator:
             elif kind == SLOWDOWN:
                 machine, factor = payload
                 self.machine_slowdown[machine] = factor
+            if self._fabric_dirty:
+                self._fabric_dirty = False
+                self._reprice(t)
+            if self.event_hook is not None:
+                self.event_hook(self, kind)
             if not self.events and (self.waiting or self.running):
                 self._push(self.clock + self.round_period, ROUND, None)
         return self.results()
@@ -291,4 +372,8 @@ class ClusterSimulator:
         out = summarize(self.finished, self.timeline,
                         unfinished=self.running + self.waiting)
         out["n_rejected"] = len(self.rejected)
+        if self.fabric is not None:
+            # only under a shared fabric: adding the key unconditionally
+            # would break v1 artifact byte-compatibility
+            out["n_reprices"] = self.n_reprices
         return out

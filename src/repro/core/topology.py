@@ -10,6 +10,14 @@ Racks may be heterogeneous (``rack_sizes``): machine ids keep a fixed
 per-rack stride of ``machines_per_rack = max(rack_sizes)`` so tier math
 stays pure integer division, and the missing machine slots simply hold
 zero free GPUs forever.
+
+The topology also carries the *shared fabric* capacities: every rack has
+one uplink of ``rack_uplink_bw`` bytes/s into a spine of ``spine_bw``
+bytes/s.  A cross-rack (network-tier) placement traverses the uplink of
+every rack it spans plus the spine (``placement_links``); co-running
+placements that share a link split its capacity (see
+``repro.core.fabric``).  ``None`` capacities mean "uncontended" — the
+fabric model substitutes profile-derived defaults.
 """
 from __future__ import annotations
 
@@ -43,7 +51,9 @@ class Placement:
 class ClusterTopology:
     def __init__(self, n_racks: int = 0, machines_per_rack: int = 8,
                  gpus_per_machine: int = 8,
-                 rack_sizes: Optional[Sequence[int]] = None):
+                 rack_sizes: Optional[Sequence[int]] = None,
+                 rack_uplink_bw: Optional[float] = None,
+                 spine_bw: Optional[float] = None):
         if rack_sizes is not None:
             rack_sizes = tuple(int(s) for s in rack_sizes)
             assert rack_sizes and all(s > 0 for s in rack_sizes)
@@ -66,6 +76,22 @@ class ClusterTopology:
                 self.free[m] = gpus_per_machine
         self._free_total = self.total_gpus
         self.max_rack_capacity = max(rack_sizes) * gpus_per_machine
+        # shared-fabric link capacities (bytes/s); None = uncontended default
+        self.rack_uplink_bw = rack_uplink_bw
+        self.spine_bw = spine_bw
+
+    # ------------------------------------------------------------------
+    SPINE = ("spine",)
+
+    def placement_links(self, placement: "Placement") -> tuple:
+        """Fabric links a placement's inter-node all-reduce traverses:
+        one ("uplink", rack) per rack it spans plus the spine — empty for
+        machine- and rack-tier placements, whose traffic never leaves the
+        ToR switch."""
+        racks = {m // self.machines_per_rack for m, _ in placement.alloc}
+        if len(racks) <= 1:
+            return ()
+        return tuple(("uplink", r) for r in sorted(racks)) + (self.SPINE,)
 
     # ------------------------------------------------------------------
     def free_gpus(self) -> int:

@@ -15,6 +15,11 @@ from repro.core import CommModel
 from .scenario import Scenario, get_scenario
 
 ARTIFACT_SCHEMA = "repro.experiments.artifact/v1"
+# v2 = v1 + shared-fabric contention provenance (config.contention_mode /
+# rack_uplink_bw / spine_bw) and metrics.n_reprices.  Emitted only when a
+# scenario's contention_mode is set: disabled-contention artifacts stay
+# byte-identical to v1.
+ARTIFACT_SCHEMA_V2 = "repro.experiments.artifact/v2"
 
 # volatile keys excluded from determinism comparisons (populated by callers,
 # never by run_one itself)
@@ -29,23 +34,27 @@ def _archs():
 def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
             seed: int = 0, *, n_racks: Optional[int] = None,
             n_jobs: Optional[int] = None, max_time: Optional[float] = None,
+            contention: Optional[str] = None,
             comm: Optional[CommModel] = None, archs=None) -> dict:
     """Simulate one cell and return the artifact dict.
 
     ``n_racks`` / ``n_jobs`` / ``max_time`` override the scenario (rack-count
-    sweeps, --small benchmark modes); ``comm`` lets callers inject a shared
-    or calibrated communication model.
+    sweeps, --small benchmark modes); ``contention`` switches the shared
+    fabric on (``"fair-share"``) for any scenario; ``comm`` lets callers
+    inject a shared or calibrated communication model.
     """
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
     scenario = scenario.with_overrides(n_racks=n_racks, n_jobs=n_jobs,
-                                       max_time=max_time)
+                                       max_time=max_time,
+                                       contention_mode=contention)
     archs = archs if archs is not None else _archs()
     policy = policy or scenario.policy
     sim = scenario.build_sim(archs, policy=policy, seed=seed, comm=comm)
     metrics = sim.run(max_time=scenario.max_time)
     return {
-        "schema": ARTIFACT_SCHEMA,
+        "schema": (ARTIFACT_SCHEMA_V2 if scenario.contention_mode
+                   else ARTIFACT_SCHEMA),
         "scenario": scenario.name,
         "policy": policy,
         "seed": seed,

@@ -2,8 +2,8 @@
 
 A ``Scenario`` is one simulated workload regime: cluster shape (possibly
 heterogeneous racks), network regime (hardware profile, per-tier contention,
-machine-slowdown schedules), trace kind + parameters, and default policy /
-simulator knobs.  Scenarios are pure data — the same (scenario, policy,
+machine-slowdown schedules, endogenous shared-fabric contention), trace kind
++ parameters, and default policy / simulator knobs.  Scenarios are pure data — the same (scenario, policy,
 seed) triple always builds the same simulation, which is what makes the
 parallel sweep runner deterministic.
 
@@ -22,13 +22,17 @@ from repro.core import (
     ClusterSimulator,
     ClusterTopology,
     CommModel,
+    FairShareFabric,
     load_csv_trace,
     make_batch_trace,
     make_bursty_trace,
     make_mixed_trace,
     make_poisson_trace,
 )
+from repro.core.fabric import DEFAULT_SPINE_X, DEFAULT_UPLINK_X
 from repro.core.policies import make_policy
+
+CONTENTION_MODES = (None, "fair-share")
 
 TRACE_MAKERS = {
     "batch": make_batch_trace,
@@ -84,6 +88,11 @@ class Scenario:
     overlap_frac: float = 0.25
     slowdown_events: Tuple[Tuple[float, int, float], ...] = ()
     contention: Optional[ContentionSchedule] = None
+    # endogenous cross-job contention: None (empty fabric, v1-identical) or
+    # "fair-share" (co-running cross-rack jobs split uplink/spine capacity)
+    contention_mode: Optional[str] = None
+    rack_uplink_bw: Optional[float] = None  # bytes/s; None = 4x NIC rate
+    spine_bw: Optional[float] = None        # bytes/s; None = 8x NIC rate
     # workload
     trace: str = "batch"  # batch | poisson | bursty | mixed | csv
     n_jobs: int = 500
@@ -107,13 +116,46 @@ class Scenario:
         return dataclasses.replace(self, **kw) if kw else self
 
     def build_cluster(self) -> ClusterTopology:
+        fabric_kw = dict(rack_uplink_bw=self.rack_uplink_bw,
+                         spine_bw=self.spine_bw)
         if self.rack_sizes is not None:
             return ClusterTopology(machines_per_rack=self.machines_per_rack,
                                    gpus_per_machine=self.gpus_per_machine,
-                                   rack_sizes=self.rack_sizes)
+                                   rack_sizes=self.rack_sizes, **fabric_kw)
         return ClusterTopology(n_racks=self.n_racks,
                                machines_per_rack=self.machines_per_rack,
-                               gpus_per_machine=self.gpus_per_machine)
+                               gpus_per_machine=self.gpus_per_machine,
+                               **fabric_kw)
+
+    def _effective_nic_bw(self) -> float:
+        """Per-participant network-tier bandwidth after bandwidth_scale —
+        mirrors build_comm's profile scaling, from scenario data alone."""
+        bw = PROFILES[self.profile].tier("network").bandwidth
+        return bw * self.bandwidth_scale.get("network", 1.0)
+
+    def _fabric_capacities(self, nic_bw: float) -> Tuple[float, float]:
+        """(rack_uplink_bw, spine_bw) with the uncontended defaults
+        resolved — the single source for both the simulated fabric and
+        the artifact provenance."""
+        uplink = (self.rack_uplink_bw if self.rack_uplink_bw is not None
+                  else DEFAULT_UPLINK_X * nic_bw)
+        spine = (self.spine_bw if self.spine_bw is not None
+                 else DEFAULT_SPINE_X * nic_bw)
+        return uplink, spine
+
+    def build_fabric(self, cluster: ClusterTopology,
+                     comm: CommModel) -> Optional[FairShareFabric]:
+        if self.contention_mode is None:
+            return None
+        if self.contention_mode not in CONTENTION_MODES:
+            raise ValueError(
+                f"scenario {self.name!r}: unknown contention_mode "
+                f"{self.contention_mode!r}; known: "
+                f"{', '.join(str(m) for m in CONTENTION_MODES)}")
+        nic_bw = comm.profile.tier("network").bandwidth
+        uplink, spine = self._fabric_capacities(nic_bw)
+        return FairShareFabric(cluster, nic_bw=nic_bw,
+                               rack_uplink_bw=uplink, spine_bw=spine)
 
     def build_comm(self, archs, calibration=None) -> CommModel:
         profile = PROFILES[self.profile]
@@ -148,18 +190,24 @@ class Scenario:
             real = [m for m in range(cluster.n_machines)
                     if cluster.free[m] > 0]  # pre-allocation: full capacity
             events += self.contention.events(real, seed)
+        comm = comm or self.build_comm(archs)
         sim = ClusterSimulator(cluster,
                                make_policy(policy or self.policy),
-                               comm or self.build_comm(archs),
+                               comm,
                                round_period=self.round_period,
-                               slowdown_events=events or None)
+                               slowdown_events=events or None,
+                               fabric=self.build_fabric(cluster, comm))
         for job in self.build_trace(archs, seed):
             sim.submit(job)
         return sim
 
     def config_dict(self) -> Dict[str, Any]:
-        """JSON-serializable scenario description (artifact provenance)."""
-        return {
+        """JSON-serializable scenario description (artifact provenance).
+
+        The shared-fabric keys appear only when ``contention_mode`` is set:
+        a disabled-contention artifact stays byte-identical to schema v1.
+        """
+        out = {
             "n_racks": self.n_racks,
             "machines_per_rack": self.machines_per_rack,
             "gpus_per_machine": self.gpus_per_machine,
@@ -179,6 +227,16 @@ class Scenario:
             "max_time": (None if math.isinf(self.max_time)
                          else self.max_time),
         }
+        if self.contention_mode is not None:
+            # record the EFFECTIVE capacities (defaults resolved against the
+            # scenario's scaled profile), not the raw None fields — the
+            # artifact must pin the simulation inputs even if the default
+            # multipliers or profiles change later
+            uplink, spine = self._fabric_capacities(self._effective_nic_bw())
+            out["contention_mode"] = self.contention_mode
+            out["rack_uplink_bw"] = uplink
+            out["spine_bw"] = spine
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -264,3 +322,26 @@ register(Scenario(
     description="replay an external Philly/Helios-style CSV (needs "
     "csv_path override / sweep --csv)",
     trace="csv", n_jobs=0))
+
+# -- endogenous cross-job contention (shared fabric, schema v2) ---------------
+# TPU v5e NIC rate is 25e9 B/s per participant, so spine_bw=50e9 saturates at
+# two full-rate cross-rack jobs and rack_uplink_bw=25e9 at one per rack.
+register(Scenario(
+    "congested-spine",
+    description="fair-share fabric with a spine that carries only 2 "
+    "full-rate cross-rack jobs: scattered placements throttle each other",
+    contention_mode="fair-share", spine_bw=50e9,
+    trace="batch", n_jobs=400))
+register(Scenario(
+    "oversubscribed-uplinks",
+    description="fair-share fabric, rack uplinks at 1x NIC rate (heavy "
+    "oversubscription): every extra cross-rack job on a rack halves both",
+    contention_mode="fair-share", rack_uplink_bw=25e9,
+    trace="batch", n_jobs=400))
+register(Scenario(
+    "consolidate-vs-scatter",
+    description="A/B regime for the contention benchmark: run with a "
+    "consolidating policy (dally) vs a scatter baseline (gandiva) on a "
+    "spine that saturates at one full-rate cross-rack job",
+    contention_mode="fair-share", spine_bw=25e9,
+    n_racks=4, trace="batch", n_jobs=150))

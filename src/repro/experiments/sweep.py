@@ -65,11 +65,13 @@ def sweep(scenarios: Sequence[str], policies: Sequence[str],
           seeds: Sequence[int], *, workers: int = 1,
           out_dir=DEFAULT_OUT, csv: Optional[str] = None,
           n_jobs: Optional[int] = None, n_racks: Optional[int] = None,
-          max_time: Optional[float] = None) -> dict:
+          max_time: Optional[float] = None,
+          contention: Optional[str] = None) -> dict:
     """Run the full cross product and return the index dict."""
     out_dir = pathlib.Path(out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
-    overrides = {"n_jobs": n_jobs, "n_racks": n_racks, "max_time": max_time}
+    overrides = {"n_jobs": n_jobs, "n_racks": n_racks, "max_time": max_time,
+                 "contention": contention}
     tasks: List[Task] = [
         (sc, csv if (csv and get_scenario(sc).trace == "csv") else None,
          pol, seed, overrides)
@@ -118,6 +120,9 @@ def main(argv=None) -> None:
                     help="override every scenario's rack count")
     ap.add_argument("--max-time", type=float, default=None,
                     help="truncate runs at this simulated time (seconds)")
+    ap.add_argument("--contention", default=None, choices=["fair-share"],
+                    help="enable endogenous shared-fabric contention for "
+                    "every scenario (schema v2 artifacts)")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     args = ap.parse_args(argv)
@@ -134,7 +139,8 @@ def main(argv=None) -> None:
         [s for s in args.scenarios.split(",") if s],
         [p for p in args.policies.split(",") if p],
         seeds, workers=args.workers, out_dir=args.out, csv=args.csv,
-        n_jobs=args.n_jobs, n_racks=args.racks, max_time=args.max_time)
+        n_jobs=args.n_jobs, n_racks=args.racks, max_time=args.max_time,
+        contention=args.contention)
     for r in index["runs"]:
         print(f"{r['scenario']:>18s} {r['policy']:>22s} seed{r['seed']} "
               f"makespan={r['makespan']/3600:8.1f}h "

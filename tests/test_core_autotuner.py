@@ -39,6 +39,68 @@ def test_cross_demand_fallback():
     assert mc == 10.0
 
 
+def test_cold_start_fallback_chain():
+    """Full chain per tier: per-(tier, g) window -> tier aggregate across
+    demands -> configured default."""
+    t = AutoTuner(history_time_limit=100.0,
+                  default_machine=111.0, default_rack=222.0)
+    t.update_demand_delay("machine", 10.0, 8, now=0.0)   # g=8 bucket
+    t.update_demand_delay("machine", 50.0, 16, now=0.0)  # g=16 bucket
+    # 1) exact bucket wins: g=8 sees only its own entry, not g=16's
+    mc, rk = t.get_tuned_timers(8, now=1.0)
+    assert mc == 10.0
+    # 2) unseen demand borrows the tier aggregate (mean of 10 and 50 + 2σ)
+    mc, _ = t.get_tuned_timers(64, now=1.0)
+    xs = [10.0, 50.0]
+    mean = sum(xs) / len(xs)
+    var = sum((x - mean) ** 2 for x in xs) / (len(xs) - 1)
+    assert mc == mean + 2.0 * math.sqrt(var)
+    # 3) rack tier never observed anything -> its default, machine's history
+    #    does NOT leak across tiers
+    assert rk == 222.0
+    # 4) everything aged out -> defaults again
+    mc, rk = t.get_tuned_timers(8, now=1000.0)
+    assert (mc, rk) == (111.0, 222.0)
+
+
+def test_bucket_emptied_by_aging_falls_back_to_aggregate():
+    """A bucket whose entries aged out (but whose tier still has fresh
+    history in other demands) uses the aggregate, not the default."""
+    t = AutoTuner(history_time_limit=100.0, default_machine=999.0)
+    t.update_demand_delay("machine", 30.0, 8, now=0.0)    # will age out
+    t.update_demand_delay("machine", 70.0, 16, now=150.0)  # stays fresh
+    mc, _ = t.get_tuned_timers(8, now=200.0)
+    assert mc == 70.0  # g=8 empty after aging; tier aggregate has g=16's
+
+
+def test_cache_invalidated_on_update_demand_delay():
+    """get_tuned_timers memoizes on (g, now); a new observation must not
+    serve the stale cached value for the same key."""
+    t = AutoTuner()
+    t.update_demand_delay("machine", 10.0, 8, now=0.0)
+    before = t.get_tuned_timers(8, now=5.0)
+    assert before[0] == 10.0
+    cached_again = t.get_tuned_timers(8, now=5.0)  # cache hit
+    assert cached_again == before
+    t.update_demand_delay("machine", 90.0, 8, now=5.0)
+    after = t.get_tuned_timers(8, now=5.0)  # same key, fresh stats
+    assert after != before
+    xs = [10.0, 90.0]
+    mean = sum(xs) / len(xs)
+    var = sum((x - mean) ** 2 for x in xs) / (len(xs) - 1)
+    assert after[0] == mean + 2.0 * math.sqrt(var)
+
+
+def test_cache_invalidated_across_tiers_and_demands():
+    """An update in ANY bucket clears the whole memo — the aggregate
+    fallback means other (g, now) keys may now resolve differently."""
+    t = AutoTuner(default_machine=555.0)
+    assert t.get_tuned_timers(64, now=1.0)[0] == 555.0  # cold default cached
+    t.update_demand_delay("machine", 20.0, 8, now=1.0)
+    # g=64 now borrows the tier aggregate instead of the stale default
+    assert t.get_tuned_timers(64, now=1.0)[0] == 20.0
+
+
 @settings(max_examples=40, deadline=None)
 @given(st.lists(st.floats(0.0, 1e5), min_size=1, max_size=50))
 def test_timer_bounds_property(xs):

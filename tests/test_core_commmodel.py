@@ -43,6 +43,47 @@ def test_bigger_gradient_higher_latency():
     assert b > a
 
 
+def test_single_gpu_job_has_zero_sensitivity_at_every_tier():
+    """Regression: for g == 1 the rack/network canonical placements used to
+    emit a zero-GPU machine entry ((1, 0)) that counted as a second ring
+    participant, charging a 1-GPU job for an all-reduce it never does."""
+    for name in ("yi-9b", "qwen3-moe-30b-a3b"):
+        s = COMM.sensitivity_pct(name, 0.3, 1)
+        assert s == {"machine": 0.0, "rack": 0.0, "network": 0.0}
+
+
+def test_canonical_placements_never_contain_empty_machines():
+    for g in (1, 2, 3, 8, 17):
+        for tier in ("machine", "rack", "network"):
+            pl = CommModel._canonical_placement(g, tier, 8, 8)
+            assert pl.n_gpus == g
+            assert all(c > 0 for _, c in pl.alloc), (g, tier, pl)
+
+
+def test_cache_eviction_is_bounded_fifo_not_wholesale():
+    """Regression: overflowing the memo used to clear() it entirely; now
+    only the oldest entry is dropped and hit/miss stats stay coherent."""
+    cm = CommModel.from_configs(ARCHS_L, cache_size=4)
+    ref = CommModel.from_configs(ARCHS_L, cache_size=0)
+    shapes = [Placement(((0, k), (1, 1))) for k in range(1, 7)]  # 6 keys
+    for pl in shapes:
+        cm.allreduce_time("yi-9b", pl, 8, 8)
+    assert len(cm._ar_cache) == 4
+    assert cm.cache_misses == 6 and cm.cache_hits == 0
+    # the 4 newest survive: re-querying them hits and stays correct
+    for pl in shapes[2:]:
+        assert (cm.allreduce_time("yi-9b", pl, 8, 8)
+                == ref.allreduce_time("yi-9b", pl, 8, 8))
+    assert cm.cache_hits == 4 and cm.cache_misses == 6
+    # the 2 oldest were evicted: recomputed (miss), still correct
+    for pl in shapes[:2]:
+        assert (cm.allreduce_time("yi-9b", pl, 8, 8)
+                == ref.allreduce_time("yi-9b", pl, 8, 8))
+    assert cm.cache_misses == 8
+    assert len(cm._ar_cache) == 4
+    assert cm.cache_hits + cm.cache_misses == 12  # every query accounted
+
+
 def test_calibration_scales_bandwidth_term():
     """Calibration multiplies gradient *bytes*; the per-hop latency term is
     unchanged, so the bandwidth-dominated total roughly doubles."""

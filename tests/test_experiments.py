@@ -22,7 +22,9 @@ ARCHS_L = list(ARCHS.values())
 def test_registry_covers_paper_and_new_regimes():
     for name in ("paper-batch", "paper-poisson", "hetero-racks",
                  "contended-network", "bursty-diurnal", "flash-crowd",
-                 "datacenter-mix", "straggler", "smoke", "csv-replay"):
+                 "datacenter-mix", "straggler", "smoke", "csv-replay",
+                 "congested-spine", "oversubscribed-uplinks",
+                 "consolidate-vs-scatter"):
         assert name in SCENARIOS
 
 
@@ -164,6 +166,17 @@ def test_sweep_deterministic_across_worker_counts(tmp_path):
     arts = [json.loads(p.read_text()) for p in f1]
     dally = [a for a in arts if a["policy"] == "dally"]
     assert dally[0]["metrics"]["makespan"] != dally[1]["metrics"]["makespan"]
+
+
+def test_sweep_contention_override_emits_v2(tmp_path):
+    """--contention fair-share flips every cell to a schema-v2 artifact and
+    is recorded in the index provenance."""
+    idx = sweep(["smoke"], ["dally"], [0], workers=1, out_dir=tmp_path,
+                n_jobs=10, contention="fair-share")
+    art = json.loads((tmp_path / idx["runs"][0]["file"]).read_text())
+    assert art["schema"] == "repro.experiments.artifact/v2"
+    assert art["config"]["contention_mode"] == "fair-share"
+    assert idx["overrides"]["contention"] == "fair-share"
 
 
 def test_sweep_index_headlines_match_artifacts(tmp_path):

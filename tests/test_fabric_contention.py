@@ -1,0 +1,263 @@
+"""Shared-fabric endogenous contention: link math, fair shares, simulator
+re-pricing, and the consolidation-vs-scatter acceptance criterion."""
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
+                        FairShareFabric, Job)
+from repro.core.fabric import DEFAULT_SPINE_X, DEFAULT_UPLINK_X
+from repro.core.policies import make_policy
+from repro.core.topology import Placement
+from repro.experiments import run_one
+
+ARCHS_L = list(ARCHS.values())
+NIC = 25e9  # tpu_v5e network-tier bandwidth (per participant)
+
+
+def _job(jid, g, iters=100, compute=0.5, arrival=0.0, model="yi-9b"):
+    return Job(job_id=jid, model=model, n_gpus=g, total_iters=iters,
+               compute_time_per_iter=compute, arrival=arrival)
+
+
+# -- placement_links ---------------------------------------------------------
+
+def test_single_rack_placements_use_no_fabric_links():
+    cl = ClusterTopology(n_racks=2, machines_per_rack=2)
+    assert cl.placement_links(Placement(((0, 8),))) == ()          # machine
+    assert cl.placement_links(Placement(((0, 4), (1, 4)))) == ()   # rack
+
+
+def test_cross_rack_placement_traverses_uplinks_and_spine():
+    cl = ClusterTopology(n_racks=3, machines_per_rack=2)
+    links = cl.placement_links(Placement(((0, 4), (2, 4), (4, 4))))
+    assert links == (("uplink", 0), ("uplink", 1), ("uplink", 2), ("spine",))
+
+
+# -- fair shares -------------------------------------------------------------
+
+def test_lone_cross_rack_job_runs_at_nic_rate():
+    cl = ClusterTopology(n_racks=2, machines_per_rack=2)
+    fab = FairShareFabric(cl, nic_bw=NIC)
+    a = _job(0, 8)
+    a.placement = Placement(((0, 4), (2, 4)))
+    assert fab.fair_shares([a]) == {0: NIC}
+
+
+def test_capacity_defaults_from_nic_rate():
+    cl = ClusterTopology(n_racks=2)
+    fab = FairShareFabric(cl, nic_bw=NIC)
+    assert fab.rack_uplink_bw == DEFAULT_UPLINK_X * NIC
+    assert fab.spine_bw == DEFAULT_SPINE_X * NIC
+    # topology-declared capacities win over the defaults
+    cl2 = ClusterTopology(n_racks=2, rack_uplink_bw=1e9, spine_bw=2e9)
+    fab2 = FairShareFabric(cl2, nic_bw=NIC)
+    assert (fab2.rack_uplink_bw, fab2.spine_bw) == (1e9, 2e9)
+
+
+def test_spine_fair_share_splits_among_users():
+    cl = ClusterTopology(n_racks=4, machines_per_rack=2, spine_bw=NIC)
+    fab = FairShareFabric(cl, nic_bw=NIC)
+    a, b = _job(0, 8), _job(1, 8)
+    a.placement = Placement(((0, 4), (2, 4)))  # racks 0-1
+    b.placement = Placement(((4, 4), (6, 4)))  # racks 2-3: disjoint uplinks
+    shares = fab.fair_shares([a, b])
+    assert shares == {0: NIC / 2, 1: NIC / 2}  # both bottleneck on the spine
+
+
+def test_uplink_bottleneck_beats_spine():
+    cl = ClusterTopology(n_racks=3, machines_per_rack=2,
+                         rack_uplink_bw=NIC, spine_bw=100 * NIC)
+    fab = FairShareFabric(cl, nic_bw=NIC)
+    a, b, c = _job(0, 8), _job(1, 8), _job(2, 8)
+    a.placement = Placement(((0, 4), (2, 4)))  # racks 0-1
+    b.placement = Placement(((1, 4), (3, 4)))  # racks 0-1 (shares uplinks)
+    c.placement = Placement(((0, 4),))         # machine tier: not a user
+    shares = fab.fair_shares([a, b, c])
+    assert shares == {0: NIC / 2, 1: NIC / 2}
+    assert 2 not in shares  # consolidated job is unaffected
+
+
+def test_machine_and_rack_tier_jobs_never_contend():
+    cl = ClusterTopology(n_racks=2, machines_per_rack=2, spine_bw=1e9)
+    fab = FairShareFabric(cl, nic_bw=NIC)
+    a, b = _job(0, 8), _job(1, 16)
+    a.placement = Placement(((0, 8),))
+    b.placement = Placement(((2, 8), (3, 8)))
+    assert fab.fair_shares([a, b]) == {}
+
+
+# -- CommModel internode_bw override ----------------------------------------
+
+def test_internode_bw_override_slows_cross_rack_ring():
+    cm = CommModel.from_configs(ARCHS_L)
+    pl = Placement(((0, 4), (9, 4)))  # spans racks
+    base = cm.allreduce_time("yi-9b", pl, 8, 8)
+    halved = cm.allreduce_time("yi-9b", pl, 8, 8, internode_bw=NIC / 2)
+    full = cm.allreduce_time("yi-9b", pl, 8, 8, internode_bw=NIC)
+    assert halved > base
+    assert full == pytest.approx(base)  # override at tier rate = no override
+    # memo cache distinguishes override values (no stale cross-hits)
+    assert cm.allreduce_time("yi-9b", pl, 8, 8) == base
+
+
+def test_internode_bw_override_ignored_on_machine_tier():
+    cm = CommModel.from_configs(ARCHS_L)
+    pl = Placement(((0, 8),))
+    assert (cm.allreduce_time("yi-9b", pl, 8, 8, internode_bw=1.0)
+            == cm.allreduce_time("yi-9b", pl, 8, 8))
+
+
+# -- simulator re-pricing ----------------------------------------------------
+
+def _contended_sim(spine_scale=1.0, fabric_on=True, hook=None):
+    """3 racks x 1 machine x 4 GPUs; scatter forces two concurrent 6-GPU
+    cross-rack jobs (m0:4,m1:2 and m1:2,m2:4) that share rack 1's uplink
+    and the spine."""
+    cl = ClusterTopology(n_racks=3, machines_per_rack=1, gpus_per_machine=4,
+                         spine_bw=spine_scale * NIC)
+    comm = CommModel.from_configs(ARCHS_L)
+    fab = FairShareFabric(cl, nic_bw=NIC) if fabric_on else None
+    sim = ClusterSimulator(cl, make_policy("scatter"), comm, fabric=fab,
+                           event_hook=hook)
+    sim.submit(_job(0, 6, iters=4000, compute=0.05))
+    sim.submit(_job(1, 6, iters=400, compute=0.05, arrival=30.0))
+    return sim
+
+
+def test_reprice_slows_then_restores_contended_job():
+    snaps = []
+
+    def hook(sim, kind):
+        a = sim.jobs[0]
+        if a.placement is not None:
+            snaps.append((sim.clock, a.iter_time))
+
+    sim = _contended_sim(hook=hook)
+    res = sim.run()
+    assert res["n_finished"] == 2
+    assert res["n_reprices"] >= 2  # job 0 slowed at t=30, restored later
+    rates = [it for _, it in snaps]
+    solo, contended = min(rates), max(rates)
+    assert contended > solo  # fair-sharing the spine stretched iterations
+    # slowed while job 1 ran, back to solo rate afterwards
+    t1_end = sim.jobs[1].finish_time
+    during = [it for t, it in snaps if 30.0 < t < t1_end]
+    after = [it for t, it in snaps if t > t1_end]
+    assert during and max(during) == contended
+    assert after and after[-1] == solo
+    # nothing lost across re-pricings
+    for j in sim.finished:
+        assert j.iters_done == j.total_iters
+
+
+def test_reprice_carries_partial_iterations_exactly():
+    """A repriced job never stopped running, so its in-flight partial
+    iteration must scale to the new rate, not restart: the long job's
+    finish time matches the piecewise-rate analytic solution exactly."""
+    cm = CommModel.from_configs(ARCHS_L)
+    pl0 = Placement(((0, 4), (1, 2)))   # job 0: racks 0-1
+    pl1 = Placement(((1, 2), (2, 4)))   # job 1: racks 1-2
+    it0 = cm.iteration_time("yi-9b", 0.05, pl0, 1, 4)[0]
+    itc0 = cm.iteration_time("yi-9b", 0.05, pl0, 1, 4,
+                             internode_bw=NIC / 2)[0]
+    itc1 = cm.iteration_time("yi-9b", 0.05, pl1, 1, 4,
+                             internode_bw=NIC / 2)[0]
+    sim = _contended_sim()
+    sim.run()
+    t1_end = 30.0 + 400 * itc1                      # job 1: contended whole run
+    done_before = 30.0 / it0 + (t1_end - 30.0) / itc0
+    expect0 = t1_end + (4000 - done_before) * it0   # fractional carry, exact
+    assert sim.jobs[1].finish_time == pytest.approx(t1_end, rel=1e-12)
+    assert sim.jobs[0].finish_time == pytest.approx(expect0, rel=1e-12)
+
+
+def test_reprice_does_not_reapply_slowdown_factor():
+    """v1 semantics pin a job's machine-slowdown factor at placement time;
+    fabric churn must not retroactively apply later SLOWDOWN events."""
+    snaps = []
+
+    def hook(sim, kind):
+        a = sim.jobs[0]
+        if a.placement is not None:
+            snaps.append((sim.clock, a.iter_time))
+
+    cl = ClusterTopology(n_racks=3, machines_per_rack=1, gpus_per_machine=4,
+                         spine_bw=NIC)
+    cm = CommModel.from_configs(ARCHS_L)
+    sim = ClusterSimulator(cl, make_policy("scatter"), cm,
+                           fabric=FairShareFabric(cl, nic_bw=NIC),
+                           event_hook=hook,
+                           slowdown_events=[(10.0, 0, 5.0)])
+    sim.submit(_job(0, 6, iters=4000, compute=0.05))
+    sim.submit(_job(1, 6, iters=400, compute=0.05, arrival=30.0))
+    res = sim.run()
+    assert res["n_finished"] == 2
+    # job 0 was placed at t=0 with factor 1; the t=30 re-price slows it to
+    # the fair-share rate only — NOT 5x on top
+    expected = cm.iteration_time("yi-9b", 0.05, Placement(((0, 4), (1, 2))),
+                                 1, 4, internode_bw=NIC / 2)[0]
+    assert max(it for _, it in snaps) == pytest.approx(expected, rel=1e-12)
+
+
+def test_contention_strictly_delays_completion():
+    t_on = _contended_sim(fabric_on=True).run()
+    t_off = _contended_sim(fabric_on=False).run()
+    assert t_on["makespan"] > t_off["makespan"]
+    assert t_on["total_comm_time"] > t_off["total_comm_time"]
+    assert "n_reprices" not in t_off  # v1 metrics stay v1
+
+
+def test_reprice_deterministic_same_seed():
+    a = run_one("congested-spine", policy="dally", seed=3, n_jobs=40)
+    b = run_one("congested-spine", policy="dally", seed=3, n_jobs=40)
+    assert a == b
+
+
+# -- scenario threading ------------------------------------------------------
+
+def test_contention_override_produces_v2_artifact():
+    art = run_one("smoke", policy="dally", seed=0, n_jobs=10,
+                  contention="fair-share")
+    assert art["schema"] == "repro.experiments.artifact/v2"
+    assert art["config"]["contention_mode"] == "fair-share"
+    # provenance records the EFFECTIVE capacities (defaults resolved
+    # against the NIC rate), never null
+    assert art["config"]["rack_uplink_bw"] == DEFAULT_UPLINK_X * NIC
+    assert art["config"]["spine_bw"] == DEFAULT_SPINE_X * NIC
+    assert art["metrics"]["n_reprices"] >= 0
+
+
+def test_disabled_contention_keeps_v1_artifact():
+    art = run_one("smoke", policy="dally", seed=0, n_jobs=10)
+    assert art["schema"] == "repro.experiments.artifact/v1"
+    assert "contention_mode" not in art["config"]
+    assert "n_reprices" not in art["metrics"]
+
+
+def test_unknown_contention_mode_is_a_clear_error():
+    with pytest.raises(ValueError, match="contention_mode"):
+        run_one("smoke", policy="dally", seed=0, n_jobs=4,
+                contention="magic")
+
+
+# -- acceptance: consolidation beats scatter under congestion ---------------
+
+def test_dally_beats_scatter_exposed_comm_under_congestion():
+    """ISSUE 2 acceptance: with contention="fair-share" on congested-spine,
+    Dally's total exposed comm is strictly lower than the scatter
+    baseline's (and so is its makespan)."""
+    dally = run_one("congested-spine", policy="dally", seed=0)["metrics"]
+    scatter = run_one("congested-spine", policy="scatter", seed=0)["metrics"]
+    assert dally["total_comm_time"] < scatter["total_comm_time"]
+    assert dally["makespan"] < scatter["makespan"]
+
+
+def test_contention_widens_the_consolidation_gap():
+    """The whole point of the subsystem: scatter pays much more for its
+    placements on a congested fabric than on an empty one."""
+    n = 120
+    sc_cont = run_one("congested-spine", policy="scatter", seed=0,
+                      n_jobs=n)["metrics"]
+    sc_empty = run_one("paper-batch", policy="scatter", seed=0,
+                       n_jobs=n)["metrics"]
+    assert sc_cont["total_comm_time"] > 2 * sc_empty["total_comm_time"]

@@ -1,0 +1,48 @@
+"""Golden-artifact regression pins.
+
+``run_one`` artifacts are fully deterministic (pure-Python float math, no
+wall-clock, canonical JSON), so their digests are stable across machines
+and worker counts.  Pinning two small contention-off cells makes refactors
+that *silently* change schedules — event ordering, priority tie-breaks,
+cache behaviour, float reassociation — fail loudly instead of drifting.
+
+If a change is *supposed* to alter schedules, update the digests below in
+the same commit and say why in its message.  ``EXPECTED`` was produced by
+the PR that introduced the shared-fabric contention subsystem, whose
+disabled-contention artifacts are byte-identical to the PR 1 schema-v1
+baseline.
+"""
+import hashlib
+
+from repro.experiments import artifact_json, run_one
+
+# (scenario, policy, seed, n_jobs) -> sha256 of the canonical artifact JSON
+EXPECTED = {
+    ("smoke", "dally", 0, 20):
+        "6990ef4b197f915f50867e3e7128a7da679649dd609dbc1412359882521dcf1f",
+    ("hetero-racks", "tiresias", 1, 18):
+        "d01f0285149aa843453cf67b5748a4c57a42fd0c63fa8d0983a04c54f4a83732",
+}
+
+
+def _digest(scenario, policy, seed, n_jobs):
+    art = run_one(scenario, policy=policy, seed=seed, n_jobs=n_jobs)
+    assert art["schema"] == "repro.experiments.artifact/v1"
+    return hashlib.sha256(artifact_json(art).encode()).hexdigest()
+
+
+def test_golden_artifact_digests():
+    for (scenario, policy, seed, n_jobs), want in EXPECTED.items():
+        got = _digest(scenario, policy, seed, n_jobs)
+        assert got == want, (
+            f"run_one({scenario!r}, policy={policy!r}, seed={seed}, "
+            f"n_jobs={n_jobs}) artifact changed: {got} != pinned {want}. "
+            "If the schedule change is intentional, update EXPECTED in "
+            "tests/test_golden_artifacts.py and justify it in the commit.")
+
+
+def test_golden_artifacts_are_volatile_free():
+    """The pinned serialization must never contain wall-clock keys."""
+    art = run_one("smoke", policy="dally", seed=0, n_jobs=20)
+    art["wall_s"] = 1.23
+    assert '"wall_s"' not in artifact_json(art)

@@ -1,0 +1,100 @@
+"""Property-based simulator invariants, checked after EVERY event via the
+``event_hook`` seam (not just at end-of-run): conservation of GPUs,
+completion exactness, monotone accounting, and seed-determinism — with and
+without the shared-fabric contention model."""
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
+                        FairShareFabric, make_batch_trace,
+                        make_poisson_trace)
+from repro.core.policies import make_policy
+from repro.experiments import run_one
+
+ARCHS_L = list(ARCHS.values())
+COMM = CommModel.from_configs(ARCHS_L)
+NIC = 25e9
+
+
+class InvariantProbe:
+    """Accumulates per-event assertions; raises on first violation."""
+
+    def __init__(self):
+        self.t_run_seen = {}
+        self.comm_seen = {}
+        self.events = 0
+
+    def __call__(self, sim, kind):
+        self.events += 1
+        cl = sim.cluster
+        # conservation: allocated + free == total, per machine in bounds
+        allocated = sum(j.placement.n_gpus for j in sim.running)
+        assert allocated + cl.free_gpus() == cl.total_gpus
+        assert all(0 <= f <= cl.gpus_per_machine for f in cl.free)
+        # no job finishes partially
+        for j in sim.finished:
+            assert j.iters_done == j.total_iters
+            assert j.placement is None
+        # preempt/restart/re-pricing never loses recorded work
+        for j in sim.jobs.values():
+            assert j.t_run >= self.t_run_seen.get(j.job_id, 0.0) - 1e-9
+            assert j.comm_time >= self.comm_seen.get(j.job_id, 0.0) - 1e-9
+            assert 0 <= j.iters_done <= j.total_iters
+            self.t_run_seen[j.job_id] = j.t_run
+            self.comm_seen[j.job_id] = j.comm_time
+        # waiting/running/finished partition the admitted jobs
+        states = len(sim.waiting) + len(sim.running) + len(sim.finished)
+        assert states + sim._pending_arrivals == len(sim.jobs)
+
+
+def _run_probed(policy, seed, racks, contended, trace="batch", n_jobs=25):
+    mk = make_batch_trace if trace == "batch" else make_poisson_trace
+    cl = ClusterTopology(n_racks=racks, spine_bw=NIC if contended else None)
+    fab = FairShareFabric(cl, nic_bw=NIC) if contended else None
+    probe = InvariantProbe()
+    sim = ClusterSimulator(cl, make_policy(policy), COMM, fabric=fab,
+                           event_hook=probe)
+    for j in mk(ARCHS_L, n_jobs=n_jobs, seed=seed):
+        sim.submit(j)
+    res = sim.run()
+    assert probe.events > 0
+    return sim, res
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000),
+       policy=st.sampled_from(["dally", "gandiva", "tiresias", "scatter"]),
+       contended=st.booleans())
+def test_invariants_hold_after_every_event(seed, policy, contended):
+    sim, res = _run_probed(policy, seed, racks=2, contended=contended)
+    assert res["n_finished"] == 25
+    assert sim.cluster.free_gpus() == sim.cluster.total_gpus
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 1000), contended=st.booleans())
+def test_invariants_under_preemption_pressure(seed, contended):
+    """1 congested rack: dally preempts + restores; nothing leaks."""
+    sim, res = _run_probed("dally", seed, racks=1, contended=contended,
+                           n_jobs=40)
+    assert res["n_finished"] == 40
+    for j in sim.finished:
+        assert j.iters_done == j.total_iters
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 50),
+       policy=st.sampled_from(["dally", "scatter"]),
+       contended=st.booleans())
+def test_same_seed_same_results_dict(seed, policy, contended):
+    _, a = _run_probed(policy, seed, racks=2, contended=contended)
+    _, b = _run_probed(policy, seed, racks=2, contended=contended)
+    assert a == b
+
+
+def test_run_one_deterministic_with_contention():
+    a = run_one("oversubscribed-uplinks", policy="tiresias", seed=7,
+                n_jobs=30)
+    b = run_one("oversubscribed-uplinks", policy="tiresias", seed=7,
+                n_jobs=30)
+    assert a == b
