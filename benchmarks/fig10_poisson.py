@@ -2,7 +2,7 @@
 scheduler and rack count + full JCT statistics at 8 racks."""
 from __future__ import annotations
 
-from .common import RACKS, SCHEDULERS, row, run_sim, save
+from .common import SCHEDULERS, row, run_sim, save
 
 
 def main(small=False):

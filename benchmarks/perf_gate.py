@@ -1,0 +1,156 @@
+"""CI perf-regression gate.
+
+Times the two CI smoke workloads — the fig7 makespan benchmark at --small
+scale and the 2-worker smoke sweep — and writes the measurements to a
+``BENCH_*.json`` file.  In gate mode (``--baseline``) it fails (exit 1)
+when any benchmark's wall clock regresses more than ``--threshold``
+(default 30%) against the committed baseline, which is how the repo's
+perf trajectory finally starts recording.
+
+    python -m benchmarks.perf_gate --out BENCH_pr.json \
+        --baseline BENCH_baseline.json           # gate (CI)
+    python -m benchmarks.perf_gate --write-baseline  # reseed the baseline
+
+The baseline is machine-dependent: reseed it (and commit the result) when
+CI runner hardware shifts enough that the gate flags unrelated PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import platform
+import sys
+import tempfile
+import time
+
+# timings below this floor are all noise: never flag a regression on them
+MIN_GATED_SECONDS = 1.0
+# best-of-N wall clocks: the min discards scheduler hiccups and cold-cache
+# effects, which matters on shared CI runners
+REPEATS = 2
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_BASELINE = REPO_ROOT / "BENCH_baseline.json"
+DEFAULT_OUT = REPO_ROOT / "BENCH_pr.json"
+
+BENCH_SCHEMA = "repro.benchmarks.perf_gate/v1"
+
+
+def _calibrate() -> float:
+    """Fixed pure-Python workload: measures this machine's raw speed so a
+    baseline committed from a different machine can be rescaled instead of
+    tripping the gate.  Deliberately independent of the repo's code — a
+    real simulator regression cannot hide in the calibration ratio."""
+    def spin():
+        t0 = time.perf_counter()
+        acc = 0
+        for i in range(5_000_000):
+            acc += i * i
+        return time.perf_counter() - t0
+    return min(spin() for _ in range(5))
+
+
+def _time_fig7_small() -> float:
+    from . import fig7_makespan
+    from .common import _SIM_CACHE
+    _SIM_CACHE.clear()  # repeats must re-simulate, not replay the memo
+    t0 = time.perf_counter()
+    fig7_makespan.main(small=True)
+    return time.perf_counter() - t0
+
+
+def _time_smoke_sweep() -> float:
+    from repro.experiments.sweep import sweep
+    with tempfile.TemporaryDirectory() as out:
+        t0 = time.perf_counter()
+        sweep(["smoke", "congested-spine"],
+              ["dally", "tiresias", "gandiva", "scatter"],
+              [0, 1], workers=2, n_jobs=40, out_dir=out)
+        return time.perf_counter() - t0
+
+
+BENCHMARKS = {
+    "fig7_small": _time_fig7_small,
+    "smoke_sweep": _time_smoke_sweep,
+}
+
+
+def measure() -> dict:
+    out = {
+        "schema": BENCH_SCHEMA,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "calib_s": round(_calibrate(), 4),
+        "benchmarks": {},
+    }
+    for name, fn in BENCHMARKS.items():
+        wall = min(fn() for _ in range(REPEATS))
+        out["benchmarks"][name] = {"wall_s": round(wall, 3)}
+        print(f"perf_gate.{name}.wall_seconds,{wall:.2f},", flush=True)
+    return out
+
+
+def compare(current: dict, baseline: dict, threshold: float) -> list:
+    """Return a list of human-readable regression strings (empty = pass).
+
+    The baseline's wall clocks are rescaled by the two machines'
+    calibration ratio when the current machine is SLOWER (clamped to
+    [1.0, 3.0]) so a baseline committed from a fast box doesn't trip the
+    gate on an unchanged tree run on a slow CI runner.  The scale never
+    drops below 1.0: calibration noise must not shrink the limit and
+    manufacture false regressions."""
+    scale = 1.0
+    base_calib = baseline.get("calib_s")
+    cur_calib = current.get("calib_s")
+    if base_calib and cur_calib:
+        scale = min(max(cur_calib / base_calib, 1.0), 3.0)
+    regressions = []
+    for name, cur in current["benchmarks"].items():
+        base = baseline.get("benchmarks", {}).get(name)
+        if base is None:
+            continue  # new benchmark: starts recording, nothing to gate
+        base_s, cur_s = base["wall_s"] * scale, cur["wall_s"]
+        limit = max(base_s, MIN_GATED_SECONDS) * (1.0 + threshold)
+        if cur_s > limit:
+            regressions.append(
+                f"{name}: {cur_s:.2f}s vs baseline {base_s:.2f}s "
+                f"(machine-scaled x{scale:.2f}; > {limit:.2f}s at "
+                f"+{threshold:.0%})")
+        else:
+            print(f"perf_gate.{name}: {cur_s:.2f}s vs baseline "
+                  f"{base_s:.2f}s (machine-scaled x{scale:.2f}) — ok",
+                  flush=True)
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=str(DEFAULT_OUT),
+                    help="where to write the measurement JSON")
+    ap.add_argument("--baseline", default=None,
+                    help="gate against this committed baseline file")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max tolerated wall-clock regression (fraction)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help=f"write {DEFAULT_BASELINE.name} instead of --out")
+    args = ap.parse_args(argv)
+
+    current = measure()
+    out = DEFAULT_BASELINE if args.write_baseline else pathlib.Path(args.out)
+    out.write_text(json.dumps(current, indent=1) + "\n")
+    print(f"perf_gate: wrote {out}", flush=True)
+
+    if args.baseline:
+        baseline = json.loads(pathlib.Path(args.baseline).read_text())
+        regressions = compare(current, baseline, args.threshold)
+        if regressions:
+            for r in regressions:
+                print(f"perf_gate REGRESSION: {r}", file=sys.stderr,
+                      flush=True)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

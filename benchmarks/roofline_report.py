@@ -3,7 +3,6 @@ roofline per (arch × shape × mesh) plus the dominant bottleneck."""
 from __future__ import annotations
 
 import json
-import pathlib
 
 from .common import ART, row
 

@@ -6,8 +6,8 @@ import argparse
 import time
 
 from . import (fig7_makespan, fig8_tails, fig9_jct_cdf, fig10_poisson,
-               fig11_utilization, fig12_contention, roofline_report,
-               table1_comm_latency, table2_jct_stats)
+               fig11_utilization, fig12_contention, fig13_parallelism,
+               roofline_report, table1_comm_latency, table2_jct_stats)
 
 ALL = [
     ("table1_comm_latency", table1_comm_latency.main),
@@ -18,6 +18,7 @@ ALL = [
     ("table2_jct_stats", table2_jct_stats.main),
     ("fig11_utilization", fig11_utilization.main),
     ("fig12_contention", fig12_contention.main),
+    ("fig13_parallelism", fig13_parallelism.main),
     ("roofline_report", roofline_report.main),
 ]
 

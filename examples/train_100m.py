@@ -9,11 +9,7 @@ real ~100M x 300-step run (use an accelerator):
 import argparse
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs import get_config
-from repro.data import SyntheticLMDataset
 from repro.launch import train as train_driver
 
 

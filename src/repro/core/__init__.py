@@ -4,8 +4,11 @@ Components (paper §IV):
   topology    — hierarchical cluster (machine / rack / network tiers)
   commmodel   — per-placement communication latency (ASTRA-sim analogue,
                 calibrated against this repo's compiled dry-run collectives)
+  parallelism — per-job hybrid DP/TP/PP/EP plans: per-pattern collective
+                traffic (ring / all-gather / point-to-point / all-to-all)
   fabric      — shared rack-uplink/spine fabric: cross-job fair-share
-                bandwidth (endogenous contention)
+                bandwidth (endogenous contention), weighted by each plan's
+                actual link usage
   simulator   — event-driven multi-job cluster simulator (ArtISt-sim analogue)
   autotuner   — delay-timer auto-tuning from starvation-time history (Algo 2)
   policies    — Dally (Algo 1 + Nw_sens preemption), Tiresias, Gandiva,
@@ -18,6 +21,7 @@ from .commmodel import CommModel  # noqa: F401
 from .fabric import FairShareFabric  # noqa: F401
 from .job import Job  # noqa: F401
 from .metrics import summarize  # noqa: F401
+from .parallelism import ParallelPlan, plan_for, pure_dp_plan  # noqa: F401
 from .simulator import ClusterSimulator  # noqa: F401
 from .topology import ClusterTopology, Placement  # noqa: F401
 from .trace import (  # noqa: F401

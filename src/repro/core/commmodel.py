@@ -12,16 +12,24 @@ M (gradient bytes) and n_buckets (layers) come from the real architecture
 configs; an optional calibration factor per arch is derived from the compiled
 dry-run artifacts (measured collective bytes / analytic bytes), mirroring the
 paper's <1% calibration of ASTRA-sim workload files against real runs.
+
+Jobs carrying a hybrid :class:`~repro.core.parallelism.ParallelPlan` are
+priced by ``plan_time`` instead: a composition of per-pattern collective
+costs — DP gradient ring, TP all-gather/reduce-scatter pinned to the
+innermost tier, point-to-point pipeline-stage activations (tolerant of the
+worst tier), and MoE expert all-to-all (hyper-sensitive to it).  A
+degenerate plan (dp=n, tp=pp=ep=1) routes through the exact pure-DP path,
+bit-for-bit, so plan-less workloads reproduce the legacy numbers.
 """
 from __future__ import annotations
 
 import json
-import math
 import pathlib
 from typing import Dict, Optional
 
 from repro.types import HardwareProfile, TPU_V5E
 
+from .parallelism import ParallelPlan
 from .topology import Placement
 
 
@@ -96,6 +104,31 @@ class CommModel:
         lat_time = 2.0 * (n - 1) * t.latency * n_buckets
         return bw_time + lat_time
 
+    def _allgather(self, bytes_, n, tier_name, n_buckets, bw_override=None):
+        """All-gather (== reduce-scatter) of ``bytes_`` over n ranks: one
+        ring pass instead of the all-reduce's two."""
+        if n <= 1:
+            return 0.0
+        t = self.profile.tier(tier_name)
+        bw = t.bandwidth if bw_override is None else bw_override
+        return (n - 1) / n * bytes_ / bw + (n - 1) * t.latency * n_buckets
+
+    def _alltoall(self, bytes_, n, tier_name, n_buckets, bw_override=None):
+        """All-to-all of ``bytes_`` per rank over n ranks.  Per byte it
+        prices like one all-gather pass — (n-1) message rounds moving
+        (n-1)/n of the payload.  What makes expert dispatch hyper-sensitive
+        in aggregate is not the per-byte constant but that the routed-token
+        volume is charged per MoE layer, never reduces like a gradient
+        ring, and runs at whatever tier the expert group spans."""
+        return self._allgather(bytes_, n, tier_name, n_buckets, bw_override)
+
+    def _p2p(self, bytes_, tier_name, bw_override=None):
+        """One point-to-point transfer (a pipeline-stage boundary): a
+        single hop, no ring — the pattern that tolerates any tier."""
+        t = self.profile.tier(tier_name)
+        bw = t.bandwidth if bw_override is None else bw_override
+        return bytes_ / bw + t.latency
+
     def allreduce_time(self, model: str, placement: Placement,
                        machines_per_rack: int,
                        gpus_per_machine: int,
@@ -140,14 +173,104 @@ class CommModel:
             self._ar_cache[key] = t
         return t
 
+    def plan_time(self, model: str, plan: Optional[ParallelPlan],
+                  placement: Placement, machines_per_rack: int,
+                  gpus_per_machine: int,
+                  internode_bw: Optional[float] = None) -> float:
+        """Per-iteration communication time of a hybrid-parallel job:
+        the sum of its plan's per-pattern collective costs on this
+        placement.  ``plan=None`` and degenerate (pure-DP) plans route
+        through :meth:`allreduce_time` — the exact legacy path, so
+        plan-less workloads stay bit-for-bit reproducible.
+        """
+        if plan is None or plan.is_pure_dp:
+            return self.allreduce_time(model, placement, machines_per_rack,
+                                       gpus_per_machine,
+                                       internode_bw=internode_bw)
+        tier = placement.tier(machines_per_rack)
+        n_machines = len(placement.alloc)
+        max_local = max(c for _, c in placement.alloc)
+        # group residency: an inner group of `size` ranks stays on one
+        # machine only if EVERY machine chunk is a whole number of groups
+        # (checking just the largest chunk would let one whole machine
+        # hide a genuinely split group on a fragmented placement)
+        tp_resident = (plan.tp == 1 or
+                       all(c % plan.tp == 0 for _, c in placement.alloc))
+        ep_size = plan.ep * plan.tp
+        ep_resident = (plan.ep == 1 or
+                       all(c % ep_size == 0 for _, c in placement.alloc))
+        key = (model, tier, placement.n_gpus, n_machines, max_local,
+               tp_resident, ep_resident, internode_bw, plan)
+        if self.cache_size:
+            hit = self._ar_cache.get(key)
+            if hit is not None:
+                self.cache_hits += 1
+                return hit
+            self.cache_misses += 1
+
+        cal = self.calibration.get(model, 1.0)
+        L = max(plan.n_buckets, 1)
+        # the fair-share override prices only inter-node (cross-machine)
+        # stages; intra-machine stages always run at the machine tier rate
+        inter_bw = internode_bw if tier != "machine" else None
+        t = 0.0
+        # TP all-gather + reduce-scatter, pinned to the innermost tier; a
+        # TP group not wholly machine-resident spills to the placement's
+        # worst tier and pays the full activation volume there
+        if plan.tp > 1:
+            if tp_resident:
+                t += 2.0 * self._allgather(plan.tp_bytes, plan.tp,
+                                           "machine", L)
+            else:
+                t += 2.0 * self._allgather(plan.tp_bytes, plan.tp, tier, L,
+                                           bw_override=inter_bw)
+        # DP gradient ring over the replicas, hierarchical like the pure
+        # path: replicas co-resident on one machine reduce at machine
+        # bandwidth first, then the leaders ring at the placement tier.
+        # A replica's physical footprint is tp*pp*ep GPUs — a replica
+        # wider than one machine makes the whole DP ring inter-node
+        # traffic (and therefore subject to the fair-share override).
+        if plan.dp > 1:
+            grad = plan.grad_bytes * cal
+            if tier == "machine":
+                t += self._ring(grad, plan.dp, "machine", L)
+            else:
+                replica = plan.tp * plan.pp * plan.ep
+                intra = min(plan.dp, max(max_local // replica, 1))
+                t += self._ring(grad, intra, "machine", L)
+                inter = -(-plan.dp // intra)
+                if inter > 1:
+                    t += self._ring(grad, inter, tier, L,
+                                    bw_override=inter_bw)
+        # PP stage-boundary activations: forward + backward point-to-point
+        # sends at the worst tier — small volume, one hop, tolerant
+        if plan.pp > 1:
+            t += (plan.pp - 1) * 2.0 * self._p2p(
+                plan.pp_bytes, tier, bw_override=inter_bw)
+        # EP expert dispatch + combine: all-to-all at the tier the expert
+        # group spans — the pattern that punishes cross-rack placement.
+        # The group's footprint includes the inner TP dimension: ep ranks
+        # stride across tp-sized cells.
+        if plan.ep > 1:
+            ep_tier = "machine" if ep_resident else tier
+            t += 2.0 * self._alltoall(
+                plan.ep_bytes, plan.ep, ep_tier, L,
+                bw_override=inter_bw if ep_tier == tier else None)
+        if self.cache_size:
+            while len(self._ar_cache) >= self.cache_size:
+                self._ar_cache.pop(next(iter(self._ar_cache)))
+            self._ar_cache[key] = t
+        return t
+
     def iteration_time(self, model: str, compute_time: float,
                        placement: Placement, machines_per_rack: int,
                        gpus_per_machine: int,
-                       internode_bw: Optional[float] = None):
+                       internode_bw: Optional[float] = None,
+                       plan: Optional[ParallelPlan] = None):
         """Returns (iter_time, exposed_comm_per_iter)."""
-        t_comm = self.allreduce_time(model, placement, machines_per_rack,
-                                     gpus_per_machine,
-                                     internode_bw=internode_bw)
+        t_comm = self.plan_time(model, plan, placement, machines_per_rack,
+                                gpus_per_machine,
+                                internode_bw=internode_bw)
         exposed = max(0.0, t_comm - self.overlap_frac * compute_time)
         return compute_time + exposed, exposed
 

@@ -60,16 +60,25 @@ class FairShareFabric:
     def fair_shares(self, jobs: Iterable) -> Dict[int, float]:
         """job_id -> effective inter-node bandwidth for every cross-rack
         job in ``jobs`` (jobs whose traffic stays under one ToR are
-        absent: they run at the profile's tier rate, uncontended)."""
+        absent: they run at the profile's tier rate, uncontended).
+
+        Each job loads the links it traverses by its parallelism plan's
+        ``fabric_weight`` — the pattern's actual traffic intensity
+        relative to a pure-DP gradient ring (which weighs 1.0, keeping
+        plan-less workloads on the exact equal-share math).  A pipeline-
+        parallel job's point-to-point stage traffic barely dents its
+        neighbours' shares; an expert-parallel all-to-all loads them
+        harder than a gradient ring would."""
         links_of: Dict[int, tuple] = {}
-        users: Dict[tuple, int] = {}
+        users: Dict[tuple, float] = {}
         for job in jobs:
             links = self.cluster.placement_links(job.placement)
             if not links:
                 continue
             links_of[job.job_id] = links
+            w = 1.0 if job.plan is None else job.plan.fabric_weight
             for link in links:
-                users[link] = users.get(link, 0) + 1
+                users[link] = users.get(link, 0.0) + w
         return {
             jid: min(self.nic_bw,
                      min(self._capacity(link) / users[link]

@@ -9,9 +9,10 @@ Low Nw_sens => the job suffered network-induced slowdowns => offer first.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
+from .parallelism import ParallelPlan
 from .topology import Placement
 
 
@@ -24,6 +25,8 @@ class Job:
     compute_time_per_iter: float  # seconds, no communication (ideal)
     arrival: float = 0.0
     skew: float = 0.0            # largest tensor / model size (Tiresias)
+    # hybrid-parallelism traffic plan; None = pure DP (the legacy path)
+    plan: Optional[ParallelPlan] = None
 
     # dynamic state ------------------------------------------------------
     iters_done: int = 0

@@ -6,10 +6,12 @@ from .variants import (  # noqa: F401
     DallyFullyConsolidatedPolicy,
     DallyManualPolicy,
     DallyNoWaitPolicy,
+    DallyPatternBlindPolicy,
 )
 
 POLICIES = {
     "dally": DallyPolicy,
+    "dally-blind": DallyPatternBlindPolicy,
     "dally-manual": DallyManualPolicy,
     "dally-nowait": DallyNoWaitPolicy,
     "dally-fullyconsolidated": DallyFullyConsolidatedPolicy,

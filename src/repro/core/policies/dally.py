@@ -36,12 +36,29 @@ class DallyPolicy(Policy):
             t_rk = 0.0
         return t_mc, t_rk
 
+    # Pattern-aware tier preference: the delay timers scale with the plan's
+    # traffic mix (ParallelPlan.delay_scales).  A PP-heavy job (rack scale
+    # -> 0) takes whatever tier is offered — its stage-boundary point-to-
+    # point traffic tolerates cross-rack placement, so it yields the
+    # rack-local slots; an EP-heavy job (scale -> 2) waits longer for
+    # consolidation, because its expert all-to-all is hyper-sensitive to
+    # it; a TP job keeps a high machine scale (a spilled TP group pays its
+    # full activation volume at the worst tier).  Plan-less jobs scale by
+    # exactly (1.0, 1.0) — the legacy behaviour, bit-for-bit.
+    def _plan_timer_scales(self, job):
+        return (1.0, 1.0) if job.plan is None else job.plan.delay_scales()
+
     # Algorithm 1: On Resource Offer
     def on_offer(self, job, sim, now):
         cl = sim.cluster
         g = job.n_gpus
         t_starv = job.starvation(now)
         t_mc, t_rk = self._timers(job, sim, now)
+        s_mc, s_rk = self._plan_timer_scales(job)
+        if (s_mc, s_rk) != (1.0, 1.0):
+            # 0.0 * inf would be nan: a zero scale means "never wait"
+            t_mc = t_mc * s_mc if s_mc > 0.0 else 0.0
+            t_rk = t_rk * s_rk if s_rk > 0.0 else 0.0
 
         # explicit capacity guards: a tier that can NEVER hold the job must
         # not be granted (or waited for), independent of the timer values —
@@ -72,8 +89,31 @@ class DallyPolicy(Policy):
     # strictly better tier when one becomes reachable.
     upgrades_per_round = 4
     upgrade_min_runtime = 900.0
+    # pattern-aware slot yielding: per round, at most this many waiting
+    # tier-sensitive (EP-heavy) jobs may claim a rack by displacing
+    # tier-tolerant (PP-heavy) running jobs to the network tier
+    yields_per_round = 2
+    # rack-scale above which a waiting job is worth displacing others
+    # for — 1.8 admits only EP-dominated plans (scale -> 2.0), whose
+    # all-to-all gains the most from a rack slot; mixed DP+EP plans gain
+    # too little to justify the displaced jobs' restart churn
+    SENSITIVE_RACK_SCALE = 1.8
+
+    def _rack_scale(self, job):
+        return (self._plan_timer_scales(job)[1]
+                if job.plan is not None else 1.0)
+
+    def _runs_cheap(self, job):
+        """True when the job's live placement exposes negligible comm —
+        tolerant in *fact*, not just by plan.  A displaced TP job whose
+        groups landed split across machines is NOT cheap (its activation
+        all-gather spilled to the worst tier) and must stay eligible for
+        upgrades and ineligible as a yield victim."""
+        return (getattr(job, "exposed_comm_per_iter", 0.0)
+                <= 0.25 * job.compute_time_per_iter)
 
     def on_round(self, sim, now):
+        self._yield_rack_slots(sim, now)
         done = 0
         for job in sorted(sim.running, key=lambda j: j.nw_sens(now)):
             if done >= self.upgrades_per_round:
@@ -84,3 +124,73 @@ class DallyPolicy(Policy):
             if level is not None:
                 sim.migrate(job, level, now)
                 done += 1
+
+    def _yield_rack_slots(self, sim, now):
+        """Pattern-aware consolidation (the tentpole's placement claim):
+        a waiting expert-parallel job whose all-to-all is hyper-sensitive
+        to cross-rack placement may claim a rack by migrating tolerant
+        (pipeline-heavy) running jobs out of it — their stage-boundary
+        point-to-point traffic runs at the network tier for ~free, so the
+        swap is strictly profitable in the traffic model.  Plan-less
+        workloads never enter here: legacy schedules are bit-identical."""
+        cl = sim.cluster
+        done = 0
+        sensitive = [j for j in sim.waiting
+                     if j.plan is not None
+                     and j.n_gpus <= cl.max_rack_capacity
+                     and self._rack_scale(j) > self.SENSITIVE_RACK_SCALE]
+        if not sensitive:
+            return
+        sensitive.sort(key=lambda j: (j.nw_sens(now), j.arrival, j.job_id))
+        for job in sensitive:
+            if done >= self.yields_per_round:
+                return
+            g = job.n_gpus
+            if cl.max_free_on_rack() >= g:
+                continue  # a plain rack offer succeeds this round anyway
+            # displaceable running jobs, bucketed by the single rack they
+            # sit in.  Victims must have rack scale EXACTLY 0 (dp=1: no
+            # sensitive outer traffic at all): only then are their delay
+            # timers truly zero after the preempt, so they re-place at
+            # whatever tier is free this same round — a partially
+            # sensitive victim (dp>1) would instead sit out a scaled
+            # timer in the queue, costing more than the EP job gains
+            by_rack = {}
+            for t in sim.running:
+                if (self._rack_scale(t) != 0.0
+                        or not self._runs_cheap(t)
+                        or now - t.run_start < self.upgrade_min_runtime):
+                    continue
+                racks = {m // cl.machines_per_rack
+                         for m, _ in t.placement.alloc}
+                if len(racks) == 1:
+                    by_rack.setdefault(racks.pop(), []).append(t)
+            for r, tolerant in sorted(by_rack.items()):
+                have = cl.rack_free(r)
+                evict = []
+                for t in sorted(tolerant,
+                                key=lambda x: (-x.placement.n_gpus,
+                                               x.job_id)):
+                    if have >= g:
+                        break
+                    evict.append(t)
+                    have += t.placement.n_gpus
+                if have < g:
+                    continue
+                # the displaced jobs must be re-hostable on WHOLE free
+                # machines outside rack r: a TP group restarted onto
+                # fragments spills its activation all-gather to the worst
+                # tier, erasing the yield's profit (and then some)
+                gpm = cl.gpus_per_machine
+                whole_free = sum(
+                    1 for m in range(cl.n_machines)
+                    if m // cl.machines_per_rack != r and cl.free[m] == gpm)
+                needed = sum(-(-t.placement.n_gpus // gpm) for t in evict)
+                if whole_free < needed:
+                    continue
+                for t in evict:
+                    sim.preempt(t, now)  # re-queues; its timers are ~0, so
+                    # it restarts at whatever tier is free this round
+                sim.place(job, "rack", now)  # rack r now holds >= g
+                done += 1
+                break

@@ -46,3 +46,16 @@ class DallyFullyConsolidatedPolicy(DallyManualPolicy):
 
     def __init__(self):
         super().__init__(machine_timer=_INF, rack_timer=_INF)
+
+
+class DallyPatternBlindPolicy(DallyPolicy):
+    """Full Dally (auto-tuned timers, Nw_sens preemption, upgrades) minus
+    the pattern-aware tier preference: every job's delay timers are priced
+    as if it ran a pure-DP gradient ring, regardless of its parallelism
+    plan.  The A/B foil for fig13: on hybrid-parallelism workloads this is
+    "pattern-blind consolidation" — EP jobs stop out-waiting PP jobs for
+    the rack-local slots.  Identical to ``dally`` on plan-less traces."""
+    name = "dally-blind"
+
+    def _plan_timer_scales(self, job):
+        return (1.0, 1.0)

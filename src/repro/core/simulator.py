@@ -35,6 +35,7 @@ ARRIVAL, ROUND, COMPLETE, SLOWDOWN = 0, 1, 2, 3
 class ClusterSimulator:
     def __init__(self, cluster: ClusterTopology, policy, comm: CommModel,
                  *, round_period: float = 300.0, restore_time: float = 30.0,
+                 checkpoint_overhead: float = 0.0,
                  preemption_min_runtime: float = 1800.0,
                  max_preemptions_per_round: int = 4,
                  slowdown_events: Optional[List] = None,
@@ -45,6 +46,10 @@ class ClusterSimulator:
         self.comm = comm
         self.round_period = round_period
         self.restore_time = restore_time
+        # extra checkpoint/restore cost charged when a preempted/migrated
+        # job resumes (paper §IV-B: preemption is not free).  Default 0.0
+        # keeps legacy artifacts byte-identical.
+        self.checkpoint_overhead = checkpoint_overhead
         self.preemption_min_runtime = preemption_min_runtime
         self.max_preemptions_per_round = max_preemptions_per_round
         self.fabric = fabric
@@ -123,7 +128,8 @@ class ClusterSimulator:
         job.placement = placement
         it, exposed = self.comm.iteration_time(
             job.model, job.compute_time_per_iter, placement,
-            self.cluster.machines_per_rack, self.cluster.gpus_per_machine)
+            self.cluster.machines_per_rack, self.cluster.gpus_per_machine,
+            plan=job.plan)
         # the slowdown factor is pinned at placement time (v1 semantics:
         # SLOWDOWN events only affect newly placed jobs); fabric re-pricing
         # reuses the pinned value so contention on/off stays a clean A/B
@@ -132,7 +138,10 @@ class ClusterSimulator:
         job.iter_time = it
         job.exposed_comm_per_iter = exposed
         job.iters_frac = 0.0  # a fresh placement restarts its iteration
-        restore = self.restore_time if job.started_once else 0.0
+        # a restart after preemption/migration pays the restore delay plus
+        # the checkpoint/restore overhead (zero by default)
+        restore = (self.restore_time + self.checkpoint_overhead
+                   if job.started_once else 0.0)
         job.run_start = now + restore
         job.started_once = True
         job.last_assignment_time = now
@@ -172,6 +181,13 @@ class ClusterSimulator:
     def migrate(self, job: Job, level: str, now: float):
         """Migration = preempt + immediate restart at the given level."""
         self.preempt(job, now)
+        self._start(job, level, now)
+
+    def place(self, job: Job, level: str, now: float):
+        """Place a WAITING job at the given consolidation level right now —
+        the public entry for policies that hand out placements outside the
+        offer loop (e.g. Dally's pattern-aware rack yielding).  The caller
+        must have verified the level is allocatable."""
         self._start(job, level, now)
 
     TIER_ORDER = {"machine": 0, "rack": 1, "network": 2}
@@ -284,7 +300,8 @@ class ClusterSimulator:
                 job.model, job.compute_time_per_iter, job.placement,
                 self.cluster.machines_per_rack,
                 self.cluster.gpus_per_machine,
-                internode_bw=shares.get(job.job_id))
+                internode_bw=shares.get(job.job_id),
+                plan=job.plan)
             it *= job.slow_factor
             if it == job.iter_time:
                 continue

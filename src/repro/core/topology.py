@@ -21,9 +21,8 @@ fabric model substitutes profile-derived defaults.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
-
 from dataclasses import dataclass
+from typing import List, Optional, Sequence
 
 TIERS = ("machine", "rack", "network")
 

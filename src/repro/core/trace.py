@@ -23,6 +23,9 @@ from typing import List, Optional, Sequence
 from repro.types import TPU_V5E, HardwareProfile
 
 from .job import Job
+from .parallelism import plan_for
+
+PARALLELISM_MODES = (None, "auto")
 
 GPU_DEMAND_PMF = [(1, 0.15), (2, 0.10), (4, 0.15), (8, 0.25),
                   (16, 0.15), (32, 0.12), (64, 0.08)]
@@ -73,15 +76,49 @@ def _sample_demand(rng: random.Random, pmf=GPU_DEMAND_PMF) -> int:
     return pmf[-1][0]
 
 
+def _check_parallelism(parallelism):
+    if parallelism not in PARALLELISM_MODES:
+        raise ValueError(
+            f"unknown parallelism mode {parallelism!r}; known: "
+            f"{', '.join(str(m) for m in PARALLELISM_MODES)}")
+
+
+def _job_plan(parallelism, cfg, g, tokens, gpus_per_machine):
+    """Plan assignment for one job.  ``parallelism`` gates it: None (the
+    default) assigns no plans — the bit-for-bit legacy workload; "auto"
+    (validated by the trace maker) derives a deterministic DP/TP/PP/EP
+    plan from the model family and demand (MoE -> expert parallel, large
+    dense -> TP/PP splits), sized against the cluster's actual machine
+    width so TP groups can fit one machine.  The derivation draws nothing
+    from the rng, so a trace generated with plans differs from its
+    plan-less twin ONLY by the plan fields."""
+    if parallelism is None:
+        return None
+    return plan_for(cfg, g, tokens_per_gpu_iter=tokens,
+                    gpus_per_machine=gpus_per_machine)
+
+
+def _filter_archs(archs, families) -> List:
+    arch_list = [cfg for cfg in archs
+                 if families is None or cfg.family in families]
+    if not arch_list:
+        raise ValueError(f"no architectures match families={families!r}")
+    return arch_list
+
+
 def _make_jobs(n_jobs, arrivals, archs, seed,
                median_gpu_hours=2.0, sigma=1.2,
-               profile: HardwareProfile = TPU_V5E) -> List[Job]:
+               profile: HardwareProfile = TPU_V5E,
+               parallelism=None, families=None,
+               demand_pmf=None, gpus_per_machine=8) -> List[Job]:
+    _check_parallelism(parallelism)
     rng = random.Random(seed)
-    arch_list = list(archs)
+    arch_list = _filter_archs(archs, families)
+    pmf = GPU_DEMAND_PMF if demand_pmf is None else list(demand_pmf)
     jobs = []
     for i in range(n_jobs):
         cfg = rng.choice(arch_list)
-        g = _sample_demand(rng)
+        g = _sample_demand(rng, pmf)
         tokens = rng.choice(TOKENS_PER_GPU_ITER_CHOICES)
         t_iter = compute_time_per_iter(cfg.n_active_params(), tokens, profile)
         gpu_hours = min(rng.lognormvariate(math.log(median_gpu_hours), sigma),
@@ -96,6 +133,7 @@ def _make_jobs(n_jobs, arrivals, archs, seed,
             compute_time_per_iter=t_iter,
             arrival=arrivals[i],
             skew=model_skew(cfg),
+            plan=_job_plan(parallelism, cfg, g, tokens, gpus_per_machine),
         ))
     return jobs
 
@@ -163,13 +201,16 @@ def make_mixed_trace(archs: Sequence, n_jobs: int = 400, seed: int = 0,
                      small_median_gpu_hours: float = 1.0,
                      large_median_gpu_hours: float = 24.0,
                      sigma: float = 1.2,
-                     profile: HardwareProfile = TPU_V5E) -> List[Job]:
+                     profile: HardwareProfile = TPU_V5E,
+                     parallelism=None, families=None,
+                     gpus_per_machine=8) -> List[Job]:
     """Datacenter mix: mostly small (1-8 GPU, short) jobs with a tail of
     large (16-128 GPU, long-running) production jobs, Poisson arrivals.
     128-GPU jobs exceed one rack on the default topology, exercising the
     network tier end-to-end."""
+    _check_parallelism(parallelism)
     rng = random.Random(seed + 30_000)
-    arch_list = list(archs)
+    arch_list = _filter_archs(archs, families)
     t = 0.0
     jobs = []
     for i in range(n_jobs):
@@ -185,7 +226,9 @@ def make_mixed_trace(archs: Sequence, n_jobs: int = 400, seed: int = 0,
         iters = max(int(gpu_hours * 3600.0 / t_iter), 10)
         jobs.append(Job(job_id=i, model=cfg.name, n_gpus=g,
                         total_iters=iters, compute_time_per_iter=t_iter,
-                        arrival=t, skew=model_skew(cfg)))
+                        arrival=t, skew=model_skew(cfg),
+                        plan=_job_plan(parallelism, cfg, g, tokens,
+                                       gpus_per_machine)))
     return jobs
 
 

@@ -4,6 +4,7 @@ single-cell runner, and a process-parallel sweep (see docs/experiments.md).
 from .runner import (  # noqa: F401
     ARTIFACT_SCHEMA,
     ARTIFACT_SCHEMA_V2,
+    ARTIFACT_SCHEMA_V3,
     artifact_json,
     run_one,
     run_one_timed,

@@ -20,6 +20,10 @@ ARTIFACT_SCHEMA = "repro.experiments.artifact/v1"
 # scenario's contention_mode is set: disabled-contention artifacts stay
 # byte-identical to v1.
 ARTIFACT_SCHEMA_V2 = "repro.experiments.artifact/v2"
+# v3 = v2 + hybrid-parallelism provenance (config.parallelism) and the
+# checkpoint-overhead knob (config.checkpoint_overhead).  Emitted only when
+# either feature is enabled: legacy cells keep their v1/v2 bytes.
+ARTIFACT_SCHEMA_V3 = "repro.experiments.artifact/v3"
 
 # volatile keys excluded from determinism comparisons (populated by callers,
 # never by run_one itself)
@@ -35,26 +39,34 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
             seed: int = 0, *, n_racks: Optional[int] = None,
             n_jobs: Optional[int] = None, max_time: Optional[float] = None,
             contention: Optional[str] = None,
+            parallelism: Optional[str] = None,
             comm: Optional[CommModel] = None, archs=None) -> dict:
     """Simulate one cell and return the artifact dict.
 
     ``n_racks`` / ``n_jobs`` / ``max_time`` override the scenario (rack-count
     sweeps, --small benchmark modes); ``contention`` switches the shared
-    fabric on (``"fair-share"``) for any scenario; ``comm`` lets callers
-    inject a shared or calibrated communication model.
+    fabric on (``"fair-share"``) for any scenario; ``parallelism`` switches
+    hybrid DP/TP/PP/EP plan assignment on (``"auto"``); ``comm`` lets
+    callers inject a shared or calibrated communication model.
     """
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
     scenario = scenario.with_overrides(n_racks=n_racks, n_jobs=n_jobs,
                                        max_time=max_time,
-                                       contention_mode=contention)
+                                       contention_mode=contention,
+                                       parallelism=parallelism)
     archs = archs if archs is not None else _archs()
     policy = policy or scenario.policy
     sim = scenario.build_sim(archs, policy=policy, seed=seed, comm=comm)
     metrics = sim.run(max_time=scenario.max_time)
+    if scenario.parallelism or scenario.checkpoint_overhead:
+        schema = ARTIFACT_SCHEMA_V3
+    elif scenario.contention_mode:
+        schema = ARTIFACT_SCHEMA_V2
+    else:
+        schema = ARTIFACT_SCHEMA
     return {
-        "schema": (ARTIFACT_SCHEMA_V2 if scenario.contention_mode
-                   else ARTIFACT_SCHEMA),
+        "schema": schema,
         "scenario": scenario.name,
         "policy": policy,
         "seed": seed,

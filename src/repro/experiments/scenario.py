@@ -17,7 +17,6 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, Mapping, Optional, Tuple
 
-from repro.types import PROFILES
 from repro.core import (
     ClusterSimulator,
     ClusterTopology,
@@ -31,6 +30,8 @@ from repro.core import (
 )
 from repro.core.fabric import DEFAULT_SPINE_X, DEFAULT_UPLINK_X
 from repro.core.policies import make_policy
+from repro.core.trace import PARALLELISM_MODES
+from repro.types import PROFILES
 
 CONTENTION_MODES = (None, "fair-share")
 
@@ -98,10 +99,16 @@ class Scenario:
     n_jobs: int = 500
     trace_kw: Mapping[str, Any] = field(default_factory=dict)
     csv_path: Optional[str] = None
+    # hybrid-parallelism plans: None (pure DP, v1-identical) or "auto"
+    # (per-job DP/TP/PP/EP plans derived from model family and demand)
+    parallelism: Optional[str] = None
     # defaults for the simulation
     policy: str = "dally"
     round_period: float = 300.0
     max_time: float = math.inf
+    # checkpoint/restore overhead charged when preempted jobs resume
+    # (0.0 keeps legacy artifacts byte-identical)
+    checkpoint_overhead: float = 0.0
 
     # -- builders -------------------------------------------------------
     def with_overrides(self, **kw) -> "Scenario":
@@ -171,16 +178,32 @@ class Scenario:
                                       calibration=calibration)
 
     def build_trace(self, archs, seed: int):
+        if self.parallelism not in PARALLELISM_MODES:
+            raise ValueError(
+                f"scenario {self.name!r}: unknown parallelism "
+                f"{self.parallelism!r}; known: "
+                f"{', '.join(str(m) for m in PARALLELISM_MODES)}")
         if self.trace == "csv":
             if not self.csv_path:
                 raise ValueError(
                     f"scenario {self.name!r} replays a CSV trace; set "
                     "csv_path (e.g. Scenario.with_overrides(csv_path=...) "
                     "or sweep --csv)")
+            if self.parallelism is not None:
+                # refusing beats silently emitting v3 provenance for a
+                # feature the CSV trace cannot carry
+                raise ValueError(
+                    f"scenario {self.name!r}: parallelism="
+                    f"{self.parallelism!r} is not supported for CSV "
+                    "replays (the trace carries no plan columns)")
             return load_csv_trace(self.csv_path, archs, **dict(self.trace_kw))
+        kw = dict(self.trace_kw)
+        if self.parallelism is not None:
+            kw["parallelism"] = self.parallelism
+            # plans size TP groups against the cluster's real machine width
+            kw.setdefault("gpus_per_machine", self.gpus_per_machine)
         maker = TRACE_MAKERS[self.trace]
-        return maker(archs, n_jobs=self.n_jobs, seed=seed,
-                     **dict(self.trace_kw))
+        return maker(archs, n_jobs=self.n_jobs, seed=seed, **kw)
 
     def build_sim(self, archs, policy: Optional[str] = None, seed: int = 0,
                   comm: Optional[CommModel] = None) -> ClusterSimulator:
@@ -195,6 +218,7 @@ class Scenario:
                                make_policy(policy or self.policy),
                                comm,
                                round_period=self.round_period,
+                               checkpoint_overhead=self.checkpoint_overhead,
                                slowdown_events=events or None,
                                fabric=self.build_fabric(cluster, comm))
         for job in self.build_trace(archs, seed):
@@ -236,6 +260,12 @@ class Scenario:
             out["contention_mode"] = self.contention_mode
             out["rack_uplink_bw"] = uplink
             out["spine_bw"] = spine
+        # schema-v3 keys, emitted only when the features are on: legacy
+        # scenarios' artifacts must stay byte-identical to v1/v2
+        if self.parallelism is not None:
+            out["parallelism"] = self.parallelism
+        if self.checkpoint_overhead:
+            out["checkpoint_overhead"] = self.checkpoint_overhead
         return out
 
 
@@ -345,3 +375,31 @@ register(Scenario(
     "spine that saturates at one full-rate cross-rack job",
     contention_mode="fair-share", spine_bw=25e9,
     n_racks=4, trace="batch", n_jobs=150))
+
+# -- hybrid parallelism (per-job DP/TP/PP/EP plans, schema v3) ----------------
+register(Scenario(
+    "mixed-parallelism",
+    description="datacenter mix with auto-derived DP/TP/PP/EP plans: MoE "
+    "jobs run expert-parallel, large dense jobs split TP x PP",
+    parallelism="auto", trace="mixed", n_jobs=400))
+register(Scenario(
+    "moe-heavy",
+    description="all-hybrid congested mix (MoE expert-parallel + TP/PP "
+    "vlm jobs, 8-64 GPUs): expert all-to-all is hyper-sensitive to "
+    "cross-rack placement, pipeline stages tolerate it — the regime where "
+    "pattern-aware consolidation (dally) beats pattern-blind (dally-blind)",
+    parallelism="auto", contention_mode="fair-share", spine_bw=25e9,
+    trace="batch", n_jobs=300,
+    trace_kw={"families": ("moe", "vlm"),
+              "demand_pmf": ((8, 0.35), (16, 0.30), (32, 0.20),
+                             (64, 0.15))}))
+register(Scenario(
+    "pipeline-tolerant",
+    description="large dense jobs split TP x PP on a congested fabric: "
+    "pipeline stages tolerate cross-rack placement, yielding rack-local "
+    "slots to placement-sensitive jobs",
+    parallelism="auto", contention_mode="fair-share", spine_bw=50e9,
+    trace="batch", n_jobs=300,
+    trace_kw={"families": ("dense", "vlm", "moe"),
+              "demand_pmf": ((8, 0.25), (16, 0.35), (32, 0.25),
+                             (64, 0.15))}))

@@ -66,12 +66,13 @@ def sweep(scenarios: Sequence[str], policies: Sequence[str],
           out_dir=DEFAULT_OUT, csv: Optional[str] = None,
           n_jobs: Optional[int] = None, n_racks: Optional[int] = None,
           max_time: Optional[float] = None,
-          contention: Optional[str] = None) -> dict:
+          contention: Optional[str] = None,
+          parallelism: Optional[str] = None) -> dict:
     """Run the full cross product and return the index dict."""
     out_dir = pathlib.Path(out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
     overrides = {"n_jobs": n_jobs, "n_racks": n_racks, "max_time": max_time,
-                 "contention": contention}
+                 "contention": contention, "parallelism": parallelism}
     tasks: List[Task] = [
         (sc, csv if (csv and get_scenario(sc).trace == "csv") else None,
          pol, seed, overrides)
@@ -123,6 +124,9 @@ def main(argv=None) -> None:
     ap.add_argument("--contention", default=None, choices=["fair-share"],
                     help="enable endogenous shared-fabric contention for "
                     "every scenario (schema v2 artifacts)")
+    ap.add_argument("--parallelism", default=None, choices=["auto"],
+                    help="enable hybrid DP/TP/PP/EP plan assignment for "
+                    "every scenario's trace (schema v3 artifacts)")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     args = ap.parse_args(argv)
@@ -140,7 +144,7 @@ def main(argv=None) -> None:
         [p for p in args.policies.split(",") if p],
         seeds, workers=args.workers, out_dir=args.out, csv=args.csv,
         n_jobs=args.n_jobs, n_racks=args.racks, max_time=args.max_time,
-        contention=args.contention)
+        contention=args.contention, parallelism=args.parallelism)
     for r in index["runs"]:
         print(f"{r['scenario']:>18s} {r['policy']:>22s} seed{r['seed']} "
               f"makespan={r['makespan']/3600:8.1f}h "

@@ -1,7 +1,8 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-# isort: split  — the two lines above MUST precede any jax-importing module.
+# the two lines above MUST precede any jax-importing module
+# isort: split
 import argparse
 import json
 import pathlib

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import decode_attention, flash_attention
 from repro.sharding import constrain
+
 from .layers import rms_norm, rope
 
 NEG_INF = -1e30

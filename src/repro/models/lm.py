@@ -10,9 +10,6 @@ Uniform-block archs run layers through ``lax.scan`` over stacked params
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

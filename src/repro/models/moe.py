@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.sharding import constrain
+
 from .layers import _act, mlp_apply, rms_norm
 
 

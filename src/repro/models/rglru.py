@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.kernels.rglru_scan import rglru_scan
 from repro.models.schema import RGLRU_BLOCKS
 from repro.sharding import constrain
+
 from .layers import rms_norm
 
 RGLRU_C = 8.0  # recurrence sharpness constant (RG-LRU paper value)

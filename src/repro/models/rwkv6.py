@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels.rwkv6_wkv import rwkv6_wkv
 from repro.sharding import constrain
+
 from .layers import rms_norm
 
 

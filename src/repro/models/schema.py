@@ -4,7 +4,7 @@ and initializers.  From one schema tree we derive (a) real initialized params,
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax

@@ -6,8 +6,6 @@ allocating device memory — the dry-run lowers against these.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -1,6 +1,4 @@
 """Policy decision tables: Algo 1 acceptance logic, variants, Tiresias skew."""
-import pytest
-
 from repro.configs import ARCHS
 from repro.core import ClusterSimulator, ClusterTopology, CommModel
 from repro.core.job import Job

@@ -1,5 +1,4 @@
 """Cluster topology invariants (hypothesis)."""
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.topology import ClusterTopology, Placement

@@ -7,9 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS
-from repro.models.moe import moe_block, moe_block_dense_reference
-from repro.models.schema import block_schema, init_params
 from repro.models import lm
+from repro.models.moe import moe_block, moe_block_dense_reference
 
 
 def _moe_params(cfg, key):

@@ -1,12 +1,12 @@
 """Sharding-rule invariants for the production mesh (no jax devices needed)."""
 from collections import Counter
 
+import jax
 import pytest
 
-from repro.configs import ARCHS, SHAPES
-from repro.models.schema import Param, model_schema, param_logical_axes
+from repro.configs import ARCHS
+from repro.models.schema import Param, model_schema
 from repro.sharding import make_rules, spec_for
-import jax
 
 
 class FakeMesh:

@@ -1,17 +1,14 @@
 """Optimizer, CE loss, data pipeline, checkpoint manager, e2e training."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS
 from repro.data import SyntheticLMDataset
 from repro.models import lm
 from repro.models.layers import chunked_ce_loss
-from repro.optim import adamw_update, global_norm, init_train_state
+from repro.optim import adamw_update, init_train_state
 from repro.train import make_train_step
 
 
