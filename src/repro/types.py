@@ -7,7 +7,6 @@ by both the roofline analysis and the cluster simulator's communication model.
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
