@@ -1,0 +1,94 @@
+"""Fig. 14 (beyond the paper): datacenter-scale simulator scaling curve.
+
+The paper's platform exists to answer placement questions cheaply; real DL
+datacenters run thousands of machines and tens of thousands of jobs (Hu et
+al., 2021).  This benchmark measures the *simulator's own* wall-clock as
+the cluster grows through the datacenter-scale scenario family — 256, 512
+and 1024 machines at a constant per-GPU offered load — and, as the
+headline rows, the speedup of the indexed `ClusterTopology` over the
+retained linear-scan `NaiveClusterTopology` on the same 256-machine cell
+(identical schedules and artifacts; only the capacity-query implementation
+differs).  The A/B runs under two policies: `tiresias` is nearly pure
+capacity-query load (no delay-timer tuning, no migration churn), so it
+isolates the topology's own contribution; `dally` adds the paper policy's
+real per-round work (auto-tuned timers, upgrade migrations), which both
+implementations pay identically and which dilutes the ratio.
+
+    python -m benchmarks.fig14_scale           # full: 10k-job cells,
+                                               # 256 -> 1024 machines
+    python -m benchmarks.fig14_scale --small   # CI smoke: 64 -> 256
+                                               # machines, 400-job cells
+
+Writes benchmarks/artifacts/fig14_scale.json; `perf_gate.py` times the
+--small mode as the `fig14_small` benchmark.
+"""
+from __future__ import annotations
+
+from .common import row, run_one_timed, save
+
+SEED = 0
+POLICY = "dally"
+
+# (scenario, n_racks override, n_jobs): the full curve holds the job count
+# at 10k — the ISSUE's acceptance cell sizes — while machines quadruple;
+# each dc scenario carries its own arrival rate (constant per-GPU load).
+FULL_CELLS = (("dc-256", None, None),        # 32 racks, 10k jobs
+              ("dc-512", None, 10_000),
+              ("dc-1024", None, 10_000))
+SMALL_CELLS = (("dc-256", 8, 400),           # 64 machines
+               ("dc-256", 16, 400),          # 128 machines
+               ("dc-256", None, 400))        # 256 machines
+# the indexed-vs-naive A/B runs on the largest cell of the mode, once per
+# policy (tiresias = topology-bound, dally = paper policy)
+SPEEDUP_POLICIES = ("tiresias", "dally")
+FULL_SPEEDUP = ("dc-256", None, None)
+SMALL_SPEEDUP = ("dc-256", None, 400)
+
+
+def _cell(scenario, n_racks, n_jobs, naive=False, policy=POLICY):
+    art = run_one_timed(scenario, policy=policy, seed=SEED,
+                        n_racks=n_racks, n_jobs=n_jobs,
+                        naive_topology=naive)
+    cfg = art["config"]
+    return {
+        "scenario": art["scenario"],
+        "policy": policy,
+        "n_machines": cfg["n_racks"] * cfg["machines_per_rack"],
+        "n_jobs": cfg["n_jobs"],
+        "topology": "naive" if naive else "indexed",
+        "wall_s": round(art["wall_s"], 3),
+        "makespan_hours": round(art["metrics"]["makespan"] / 3600, 2),
+        "n_finished": art["metrics"]["n_finished"],
+    }
+
+
+def main(small=False):
+    cells = SMALL_CELLS if small else FULL_CELLS
+    out = {"mode": "small" if small else "full", "curve": [], "speedup": {}}
+    for scenario, n_racks, n_jobs in cells:
+        c = _cell(scenario, n_racks, n_jobs)
+        out["curve"].append(c)
+        row(f"fig14.wall_seconds.{c['n_machines']}m", round(c["wall_s"], 2),
+            f"{c['n_jobs']} jobs, makespan {c['makespan_hours']}h")
+    scenario, n_racks, n_jobs = SMALL_SPEEDUP if small else FULL_SPEEDUP
+    for policy in SPEEDUP_POLICIES:
+        indexed = _cell(scenario, n_racks, n_jobs, policy=policy)
+        naive = _cell(scenario, n_racks, n_jobs, naive=True, policy=policy)
+        assert indexed["makespan_hours"] == naive["makespan_hours"], \
+            "topology A/B changed the schedule"
+        speedup = naive["wall_s"] / max(indexed["wall_s"], 1e-9)
+        out["speedup"][policy] = {"indexed": indexed, "naive": naive,
+                                  "speedup": round(speedup, 2)}
+        row(f"fig14.indexed_vs_naive_speedup.{policy}."
+            f"{indexed['n_machines']}m", round(speedup, 2),
+            "acceptance: >= 5x on a 256-machine 10k-job cell (full mode)")
+    save("fig14_scale", out)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--small", action="store_true",
+                    help="CI-sized cells (64-256 machines, 400 jobs)")
+    main(small=ap.parse_args().small)

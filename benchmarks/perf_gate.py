@@ -70,9 +70,19 @@ def _time_smoke_sweep() -> float:
         return time.perf_counter() - t0
 
 
+def _time_fig14_small() -> float:
+    # datacenter-scale smoke: 64->256-machine cells + the indexed-vs-naive
+    # topology A/B; guards the O(1) capacity indices against regressions
+    from . import fig14_scale
+    t0 = time.perf_counter()
+    fig14_scale.main(small=True)
+    return time.perf_counter() - t0
+
+
 BENCHMARKS = {
     "fig7_small": _time_fig7_small,
     "smoke_sweep": _time_smoke_sweep,
+    "fig14_small": _time_fig14_small,
 }
 
 

@@ -6,7 +6,7 @@ and is always preferred; this fallback exists so the test suite still
 installed.  It implements exactly the subset this repo's property tests use:
 
   given, settings, strategies.{integers, floats, booleans, sampled_from,
-                               lists, tuples, randoms}
+                               lists, tuples, randoms, one_of, just}
 
 Semantics: ``@given`` runs the test body ``max_examples`` times with values
 drawn from a ``random.Random`` seeded from the test's qualified name — the
@@ -66,6 +66,16 @@ def randoms(**_ignored) -> SearchStrategy:
     return SearchStrategy(lambda rng: random.Random(rng.getrandbits(64)))
 
 
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    if len(strategies) == 1 and not isinstance(strategies[0], SearchStrategy):
+        strategies = tuple(strategies[0])  # one_of([a, b]) call form
+    return SearchStrategy(lambda rng: rng.choice(strategies).draw(rng))
+
+
 def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
              **_ignored):
     def apply(fn):
@@ -105,7 +115,7 @@ def install() -> None:
     mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "sampled_from", "lists",
-                 "tuples", "randoms"):
+                 "tuples", "randoms", "one_of", "just"):
         setattr(st, name, globals()[name])
     st.SearchStrategy = SearchStrategy
     mod.strategies = st

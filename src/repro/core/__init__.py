@@ -23,12 +23,17 @@ from .job import Job  # noqa: F401
 from .metrics import summarize  # noqa: F401
 from .parallelism import ParallelPlan, plan_for, pure_dp_plan  # noqa: F401
 from .simulator import ClusterSimulator  # noqa: F401
-from .topology import ClusterTopology, Placement  # noqa: F401
+from .topology import (  # noqa: F401
+    ClusterTopology,
+    NaiveClusterTopology,
+    Placement,
+)
 from .trace import (  # noqa: F401
     load_csv_trace,
     make_batch_trace,
     make_bursty_trace,
     make_mixed_trace,
+    make_philly_trace,
     make_poisson_trace,
     save_csv_trace,
 )

@@ -10,12 +10,24 @@ clusters need a smaller history limit because more jobs get placed over
 time") implies an *age*-based window.  We implement the age-based reading
 (entries observed more than HISTORY_TIME_LIMIT ago are dropped) and note the
 ambiguity in DESIGN.md.
+
+Caching: the memo used to key on ``(g, now)`` — with ``now`` advancing
+every scheduling round the hit rate was ~0%, every miss re-filtered the
+full tier history (without ever pruning it on the fallback path), and the
+tuner dominated datacenter-scale runs.  Timer values only change when a
+new observation lands or an old one ages out, so the caches below key on
+what actually varies: one memo per (tier, demand) bucket and one per-tier
+aggregate for the cold-start fallback, each stamped with a
+``valid_until`` (the earliest contributing entry's expiry; +inf when
+nothing can age out).  ``update_demand_delay`` invalidates exactly the
+bucket it touched plus that tier's aggregate.  The computed values are
+bit-identical to the uncached math — the regression tests pin this.
 """
 from __future__ import annotations
 
 import math
 from collections import defaultdict, deque
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 
 class AutoTuner:
@@ -26,45 +38,82 @@ class AutoTuner:
         self.default = {"machine": default_machine, "rack": default_rack}
         # (tier, g) -> deque of (observed_at, wait_time)
         self.lists: Dict[Tuple[str, int], deque] = defaultdict(deque)
-        self._cache: Dict[Tuple[int, float], Tuple[float, float]] = {}
+        # (tier, g) -> (valid_until, timer | None); None = bucket empty,
+        # resolve through the tier aggregate
+        self._bucket_cache: Dict[Tuple[str, int],
+                                 Tuple[float, Optional[float]]] = {}
+        # tier -> (valid_until, timer | None); None = tier never observed
+        # anything fresh, resolve to the default
+        self._agg_cache: Dict[str, Tuple[float, Optional[float]]] = {}
 
     def update_demand_delay(self, tier: str, wait_time: float, g: int,
                             now: float):
         """Paper Algo 1 lines 7/15: record the starvation time that preceded
         an accepted offer at this consolidation tier."""
         self.lists[(tier, g)].append((now, wait_time))
-        self._cache.clear()
+        # targeted invalidation: only this bucket's memo and this tier's
+        # aggregate can change — other demands' exact-bucket values cannot
+        self._bucket_cache.pop((tier, g), None)
+        self._agg_cache.pop(tier, None)
 
-    def _window(self, tier: str, g: int, now: float):
-        dq = self.lists[(tier, g)]
+    def _prune(self, dq: deque, now: float):
         while dq and now - dq[0][0] > self.history_time_limit:
             dq.popleft()
-        return [w for _, w in dq]
+
+    @staticmethod
+    def _mean_plus_2std(xs) -> float:
+        mean = sum(xs) / len(xs)
+        var = sum((x - mean) ** 2 for x in xs) / max(len(xs) - 1, 1)
+        return mean + 2.0 * math.sqrt(var)
+
+    def _tier_aggregate(self, tier: str, now: float) -> Optional[float]:
+        """Cold-start fallback: the tier's history aggregated across all
+        demands, pruning aged entries as it goes (the old path re-filtered
+        them on every call but never dropped them)."""
+        hit = self._agg_cache.get(tier)
+        if hit is not None and now <= hit[0]:
+            return hit[1]
+        xs: list = []
+        valid_until = math.inf
+        for (t2, _), dq in list(self.lists.items()):
+            if t2 != tier or not dq:
+                continue
+            self._prune(dq, now)
+            if dq:
+                valid_until = min(valid_until,
+                                  dq[0][0] + self.history_time_limit)
+                xs.extend(w for _, w in dq)
+        val = self._mean_plus_2std(xs) if xs else None
+        self._agg_cache[tier] = (valid_until, val)
+        return val
+
+    def get_tuned_timer(self, tier: str, g: int, now: float) -> float:
+        """One tier's timer: per-(tier, g) window -> tier aggregate across
+        demands (rare demands would otherwise sit on the cold-start
+        default forever — they only record on acceptance *at* that tier)
+        -> configured default."""
+        key = (tier, g)
+        hit = self._bucket_cache.get(key)
+        if hit is not None and now <= hit[0]:
+            val = hit[1]
+        else:
+            dq = self.lists[key]
+            self._prune(dq, now)
+            if dq:
+                val = self._mean_plus_2std([w for _, w in dq])
+                self._bucket_cache[key] = (
+                    dq[0][0] + self.history_time_limit, val)
+            else:
+                # an empty bucket stays empty until an update (which
+                # invalidates), so the miss result never expires
+                val = None
+                self._bucket_cache[key] = (math.inf, None)
+        if val is not None:
+            return val
+        agg = self._tier_aggregate(tier, now)
+        return agg if agg is not None else self.default[tier]
 
     def get_tuned_timers(self, g: int, now: float) -> Tuple[float, float]:
-        """Returns (T_machine, T_rack) = mean + 2*stddev per tier.
-
-        A (tier, g) bucket with no history falls back to the tier's history
-        aggregated across all demands (rare demands would otherwise sit on
-        the cold-start default forever — they only record on acceptance *at*
-        that tier), then to the default."""
-        hit = self._cache.get((g, now))
-        if hit is not None:
-            return hit
-        out = []
-        for tier in ("machine", "rack"):
-            xs = self._window(tier, g, now)
-            if not xs:
-                xs = [w for (t2, _), dq in self.lists.items() if t2 == tier
-                      for (ts, w) in dq
-                      if now - ts <= self.history_time_limit]
-            if not xs:
-                out.append(self.default[tier])
-                continue
-            mean = sum(xs) / len(xs)
-            var = sum((x - mean) ** 2 for x in xs) / max(len(xs) - 1, 1)
-            out.append(mean + 2.0 * math.sqrt(var))
-        if len(self._cache) > 4096:
-            self._cache.clear()
-        self._cache[(g, now)] = (out[0], out[1])
-        return out[0], out[1]
+        """Returns (T_machine, T_rack) = mean + 2*stddev per tier."""
+        return (self.get_tuned_timer("machine", g, now),
+                self.get_tuned_timer("rack", g, now))

@@ -72,6 +72,11 @@ class FairShareFabric:
         links_of: Dict[int, tuple] = {}
         users: Dict[tuple, float] = {}
         for job in jobs:
+            # machine-/rack-tier placements have no fabric links by
+            # definition; the pinned tier (when the simulator provides it)
+            # skips the link lookup for the large consolidated majority
+            if getattr(job, "placement_tier", None) not in (None, "network"):
+                continue
             links = self.cluster.placement_links(job.placement)
             if not links:
                 continue

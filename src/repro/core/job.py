@@ -34,6 +34,9 @@ class Job:
     t_queue: float = 0.0         # total time spent waiting
     comm_time: float = 0.0       # exposed communication time accumulated
     placement: Optional[Placement] = None
+    placement_tier: Optional[str] = None  # tier of `placement`, pinned at
+    # placement time (placements are immutable, so recomputing it per
+    # upgrade probe per round was pure waste at datacenter scale)
     iter_time: float = 0.0       # current per-iteration time (w/ comm)
     slow_factor: float = 1.0     # machine-slowdown factor of this placement
     iters_frac: float = 0.0      # partial iteration carried across re-prices

@@ -28,12 +28,15 @@ class DallyPolicy(Policy):
         return job.nw_sens(now)
 
     def _timers(self, job, sim, now):
-        t_mc, t_rk = self.tuner.get_tuned_timers(job.n_gpus, now)
-        # a job that cannot fit a machine/rack has the respective timer at 0
-        if job.n_gpus > sim.cluster.gpus_per_machine:
-            t_mc = 0.0
-        if job.n_gpus > sim.cluster.max_rack_capacity:
-            t_rk = 0.0
+        # a job that cannot fit a machine/rack has the respective timer at
+        # 0 — don't even query the tuner for that tier (such jobs are never
+        # accepted there, so the bucket is forever empty and every query
+        # would recompute the tier-wide fallback aggregate for nothing)
+        g = job.n_gpus
+        t_mc = (self.tuner.get_tuned_timer("machine", g, now)
+                if g <= sim.cluster.gpus_per_machine else 0.0)
+        t_rk = (self.tuner.get_tuned_timer("rack", g, now)
+                if g <= sim.cluster.max_rack_capacity else 0.0)
         return t_mc, t_rk
 
     # Pattern-aware tier preference: the delay timers scale with the plan's
@@ -114,12 +117,19 @@ class DallyPolicy(Policy):
 
     def on_round(self, sim, now):
         self._yield_rack_slots(sim, now)
+        # candidate pre-filter: machine-tier jobs can never upgrade (the
+        # simulator tracks the rack-/network-tier minority incrementally)
+        # and young jobs aren't eligible yet, so only the few consolidatable
+        # jobs pay the nw_sens sort — the running set itself can be
+        # thousands of jobs at datacenter scale.  Placements of OTHER jobs
+        # never change inside the loop, so filtering up front is decision-
+        # identical to the old skip-inside-sorted-loop.
+        cands = [j for j in sim.running_scattered
+                 if now - j.run_start >= self.upgrade_min_runtime]
         done = 0
-        for job in sorted(sim.running, key=lambda j: j.nw_sens(now)):
+        for job in sorted(cands, key=lambda j: j.nw_sens(now)):
             if done >= self.upgrades_per_round:
                 break
-            if now - job.run_start < self.upgrade_min_runtime:
-                continue
             level = sim.upgrade_level(job)
             if level is not None:
                 sim.migrate(job, level, now)
@@ -133,6 +143,8 @@ class DallyPolicy(Policy):
         point-to-point traffic runs at the network tier for ~free, so the
         swap is strictly profitable in the traffic model.  Plan-less
         workloads never enter here: legacy schedules are bit-identical."""
+        if not sim.any_plans:
+            return  # plan-less workload: don't scan the queue every round
         cl = sim.cluster
         done = 0
         sensitive = [j for j in sim.waiting
@@ -182,9 +194,7 @@ class DallyPolicy(Policy):
                 # fragments spills its activation all-gather to the worst
                 # tier, erasing the yield's profit (and then some)
                 gpm = cl.gpus_per_machine
-                whole_free = sum(
-                    1 for m in range(cl.n_machines)
-                    if m // cl.machines_per_rack != r and cl.free[m] == gpm)
+                whole_free = cl.n_whole_free_machines(exclude_rack=r)
                 needed = sum(-(-t.placement.n_gpus // gpm) for t in evict)
                 if whole_free < needed:
                     continue

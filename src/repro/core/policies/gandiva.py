@@ -31,22 +31,17 @@ class GandivaPolicy(Policy):
         # NB: under a shared fabric (endogenous contention) migrations also
         # change the contending set; the simulator re-prices every affected
         # running job after the round
-        # migrate at most one job per round to a strictly better tier
+        # migrate at most one job per round to a strictly better tier;
+        # sim.upgrade_level is a pure index query (would the job fit better
+        # right now, counting its own GPUs as free?), and machine-tier jobs
+        # can never upgrade, so only the scattered minority is scanned
         order = {"machine": 0, "rack": 1, "network": 2}
         best = None
-        for job in sim.running:
-            tier = job.placement.tier(sim.cluster.machines_per_rack)
-            if tier == "machine":
-                continue
-            # would it fit better if re-placed right now (using its own gpus)?
-            sim.cluster.release(job.placement)
-            target = sim.cluster.best_feasible_level(job.n_gpus)
-            feasible_better = (target is not None
-                               and order[target] < order[tier])
-            if feasible_better and (best is None or order[target] <
-                                    order[best[1]]):
+        for job in sim.running_scattered:
+            target = sim.upgrade_level(job)
+            if target is not None and (best is None
+                                       or order[target] < order[best[1]]):
                 best = (job, target)
-            sim.cluster.retake(job.placement)
         if best is not None:
             sim.migrate(best[0], best[1], now)
 

@@ -21,6 +21,8 @@ re-pushed through the existing versioning mechanism.
 from __future__ import annotations
 
 import heapq
+from bisect import insort
+from operator import attrgetter
 from typing import Callable, Dict, List, Optional
 
 from .commmodel import CommModel
@@ -30,6 +32,8 @@ from .metrics import Timeline
 from .topology import ClusterTopology
 
 ARRIVAL, ROUND, COMPLETE, SLOWDOWN = 0, 1, 2, 3
+
+_WAIT_KEY = attrgetter("_wait_key")
 
 
 class ClusterSimulator:
@@ -66,9 +70,17 @@ class ClusterSimulator:
         self.waiting: List[Job] = []
         self._waiting_dirty = False
         self.running: List[Job] = []
+        # running jobs on a rack-/network-tier placement — the only
+        # upgrade/migration candidates; maintained incrementally so the
+        # per-round policy scans skip the (large) machine-tier majority
+        self.running_scattered: List[Job] = []
         self.finished: List[Job] = []
         self.rejected: List[Job] = []  # demand exceeds cluster capacity
         self.jobs: Dict[int, Job] = {}
+        # True once any submitted job carries a parallelism plan: plan-only
+        # policy machinery (Dally's rack-slot yielding) can skip its
+        # per-round waiting-queue scan entirely on plan-less workloads
+        self.any_plans = False
         self.timeline = Timeline()
         self.machine_slowdown: Dict[int, float] = {}
         for t, machine, factor in (slowdown_events or []):
@@ -89,20 +101,29 @@ class ClusterSimulator:
             self.rejected.append(job)
             return
         self.jobs[job.job_id] = job
+        if job.plan is not None:
+            self.any_plans = True
         self._pending_arrivals += 1
         self._push(job.arrival, ARRIVAL, job.job_id)
 
-    def _enqueue(self, job: Job, now: float):
-        """Append to the wait queue.  When the policy's waiting priorities
-        are static (see Policy contract) the priority key is computed once
-        here, and the queue is lazily re-sorted at the next round only if
-        membership changed — removals keep order, so thousands of idle
-        rounds skip the O(n log n) re-sort entirely."""
+    def _enqueue(self, job: Job, now: float, tail: bool = False):
+        """Insert into the wait queue.  When the policy's waiting
+        priorities are static (see Policy contract) the priority key is
+        computed once here, and a clean (sorted) queue takes the job at
+        its sorted position — O(log n) comparisons, identical order to a
+        stable re-sort because the key ends in the unique job_id.  A dirty
+        queue (a preemption appended mid-round; the victim must stay at
+        the tail so same-round re-offers reach it LAST, as they always
+        have) just appends — the next round's sort restores order."""
         if self.policy.waiting_priority_static:
             job._wait_key = (self.policy.priority(job, now), job.arrival,
                              job.job_id)
+            if tail:
+                self._waiting_dirty = True
+            elif not self._waiting_dirty:
+                insort(self.waiting, job, key=_WAIT_KEY)
+                return
         self.waiting.append(job)
-        self._waiting_dirty = True
 
     # ------------------------------------------------------------------
     def _slow_factor(self, placement) -> float:
@@ -126,6 +147,7 @@ class ClusterSimulator:
         self.policy.record_acceptance(job, tier, now)
         job.t_queue += now - job.wait_since
         job.placement = placement
+        job.placement_tier = tier
         it, exposed = self.comm.iteration_time(
             job.model, job.compute_time_per_iter, placement,
             self.cluster.machines_per_rack, self.cluster.gpus_per_machine,
@@ -146,6 +168,8 @@ class ClusterSimulator:
         job.started_once = True
         job.last_assignment_time = now
         self.running.append(job)
+        if tier != "machine":
+            self.running_scattered.append(job)
         self.waiting.remove(job)
         t_end = job.run_start + job.remaining_iters() * it
         v = self._completion_version.get(job.job_id, 0) + 1
@@ -166,7 +190,10 @@ class ClusterSimulator:
         self._progress(job, now)
         self._touch_fabric(job.placement)
         self.cluster.release(job.placement)
+        if job.placement_tier != "machine":
+            self.running_scattered.remove(job)
         job.placement = None
+        job.placement_tier = None
         job.preemptions += 1
         self._completion_version[job.job_id] += 1  # invalidate completion
         self.running.remove(job)
@@ -176,7 +203,7 @@ class ClusterSimulator:
         # (otherwise run time would count as starvation and poison Algo 2's
         # wait-time lists)
         job.last_assignment_time = now
-        self._enqueue(job, now)
+        self._enqueue(job, now, tail=True)
 
     def migrate(self, job: Job, level: str, now: float):
         """Migration = preempt + immediate restart at the given level."""
@@ -194,15 +221,35 @@ class ClusterSimulator:
 
     def upgrade_level(self, job: Job) -> Optional[str]:
         """Best strictly-better consolidation level reachable for a running
-        job using free GPUs + its own (released) allocation; None if none."""
-        cur = job.placement.tier(self.cluster.machines_per_rack)
+        job using free GPUs + its own (released) allocation; None if none.
+
+        Pure query: instead of the old release -> best_feasible_level ->
+        retake round-trip (which re-indexed every machine of the placement
+        twice per probe, every round, for every running job), the
+        post-release capacity maxima are derived from the live indices —
+        releasing a placement can only raise a machine/rack maximum
+        through the machines/racks it actually touches."""
+        cl = self.cluster
+        cur = job.placement_tier
         if cur == "machine":
             return None
-        self.cluster.release(job.placement)
-        best = self.cluster.best_feasible_level(job.n_gpus)
-        self.cluster.retake(job.placement)
-        if best is not None and self.TIER_ORDER[best] < self.TIER_ORDER[cur]:
-            return best
+        g = job.n_gpus
+        alloc = job.placement.alloc
+        free = cl.free
+        if g <= cl.gpus_per_machine and (
+                cl.max_free_on_machine() >= g
+                or any(free[m] + c >= g for m, c in alloc)):
+            return "machine"
+        if cur == "network" and g <= cl.max_rack_capacity:
+            if cl.max_free_on_rack() >= g:
+                return "rack"
+            per_rack: Dict[int, int] = {}
+            for m, c in alloc:
+                r = m // cl.machines_per_rack
+                per_rack[r] = per_rack.get(r, 0) + c
+            if any(cl.rack_free(r) + d >= g for r, d in per_rack.items()):
+                return "rack"
+        # "network" can always re-host the job's own GPUs — never an upgrade
         return None
 
     # ------------------------------------------------------------------
@@ -221,12 +268,13 @@ class ClusterSimulator:
                 prio_cache[j.job_id] = v
             return v
 
-        # offers in increasing priority value; with static waiting priorities
-        # the keys were computed at enqueue time and the queue only needs
-        # re-sorting when membership was added since the last sort
+        # offers in increasing priority value; with static waiting
+        # priorities _enqueue keeps the queue sorted through arrivals and
+        # removals, so a sort only runs after a preemption appended to the
+        # tail (C-level key extraction: keys live on the jobs)
         if self.policy.waiting_priority_static:
             if self._waiting_dirty:
-                self.waiting.sort(key=lambda j: j._wait_key)
+                self.waiting.sort(key=_WAIT_KEY)
                 self._waiting_dirty = False
         else:
             self.waiting.sort(key=lambda j: (prio(j), j.arrival, j.job_id))
@@ -236,18 +284,22 @@ class ClusterSimulator:
             made_progress = False
             # single pass per iteration; placements only shrink the free
             # pool, so jobs whose demand exceeds it are skipped with an O(1)
-            # check instead of a full policy/availability probe.  Anything
+            # check instead of a full policy/availability probe — and a
+            # fully busy cluster (free == 0, the steady state of every
+            # congested regime) skips the whole pass, which is what keeps
+            # rounds sublinear in queue depth at datacenter scale.  Anything
             # that frees or re-prices resources (preemption below, delay-
             # timer updates from acceptances) re-arms the outer loop.
             free = self.cluster.free_gpus()
-            for job in list(self.waiting):
-                if job.n_gpus > free:
-                    continue  # cannot fit at any tier: skip the policy call
-                level = self.policy.on_offer(job, self, now)
-                if level is not None:
-                    self._start(job, level, now)
-                    free = self.cluster.free_gpus()
-                    made_progress = True
+            if free > 0:
+                for job in list(self.waiting):
+                    if job.n_gpus > free:
+                        continue  # cannot fit at any tier: skip the probe
+                    level = self.policy.on_offer(job, self, now)
+                    if level is not None:
+                        self._start(job, level, now)
+                        free = self.cluster.free_gpus()
+                        made_progress = True
             # network-sensitive preemption: if the most-starved waiting job
             # cannot be placed at all, evict running jobs whose priority
             # value exceeds the waiting job's by a margin (hysteresis against
@@ -258,7 +310,8 @@ class ClusterSimulator:
                         and not self._waiting_dirty):
                     top = self.waiting[0]  # sorted; removals keep order
                 elif self.policy.waiting_priority_static:
-                    top = min(self.waiting, key=lambda j: j._wait_key)
+                    # dirty only within a round that already preempted
+                    top = min(self.waiting, key=_WAIT_KEY)
                 else:
                     top = min(self.waiting,
                               key=lambda j: (prio(j), j.arrival, j.job_id))
@@ -296,6 +349,13 @@ class ClusterSimulator:
         churn must not retroactively change that."""
         shares = self.fabric.fair_shares(self.running)
         for job in self.running:
+            if job.placement_tier != "network":
+                # traffic never leaves the ToR switch: no fabric share, so
+                # re-pricing would recompute the identical iteration time
+                # (memo hit) and continue — skip the whole probe.  At
+                # datacenter scale the machine-tier majority made every
+                # reprice O(running).
+                continue
             it, exposed = self.comm.iteration_time(
                 job.model, job.compute_time_per_iter, job.placement,
                 self.cluster.machines_per_rack,
@@ -367,7 +427,10 @@ class ClusterSimulator:
                 job.finish_time = t
                 self._touch_fabric(job.placement)
                 self.cluster.release(job.placement)
+                if job.placement_tier != "machine":
+                    self.running_scattered.remove(job)
                 job.placement = None
+                job.placement_tier = None
                 self.running.remove(job)
                 self.finished.append(job)
                 self._scheduling_round(t)

@@ -40,7 +40,8 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
             n_jobs: Optional[int] = None, max_time: Optional[float] = None,
             contention: Optional[str] = None,
             parallelism: Optional[str] = None,
-            comm: Optional[CommModel] = None, archs=None) -> dict:
+            comm: Optional[CommModel] = None, archs=None,
+            naive_topology: bool = False) -> dict:
     """Simulate one cell and return the artifact dict.
 
     ``n_racks`` / ``n_jobs`` / ``max_time`` override the scenario (rack-count
@@ -48,6 +49,11 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
     fabric on (``"fair-share"``) for any scenario; ``parallelism`` switches
     hybrid DP/TP/PP/EP plan assignment on (``"auto"``); ``comm`` lets
     callers inject a shared or calibrated communication model.
+    ``naive_topology`` swaps in the retained linear-scan
+    ``NaiveClusterTopology`` — same schedules and byte-identical artifacts,
+    different wall-clock — for differential tests and the fig14 scaling
+    benchmark; being pure implementation choice it is never recorded in
+    the artifact.
     """
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
@@ -57,7 +63,8 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
                                        parallelism=parallelism)
     archs = archs if archs is not None else _archs()
     policy = policy or scenario.policy
-    sim = scenario.build_sim(archs, policy=policy, seed=seed, comm=comm)
+    sim = scenario.build_sim(archs, policy=policy, seed=seed, comm=comm,
+                             naive_topology=naive_topology)
     metrics = sim.run(max_time=scenario.max_time)
     if scenario.parallelism or scenario.checkpoint_overhead:
         schema = ARTIFACT_SCHEMA_V3

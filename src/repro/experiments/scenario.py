@@ -22,10 +22,12 @@ from repro.core import (
     ClusterTopology,
     CommModel,
     FairShareFabric,
+    NaiveClusterTopology,
     load_csv_trace,
     make_batch_trace,
     make_bursty_trace,
     make_mixed_trace,
+    make_philly_trace,
     make_poisson_trace,
 )
 from repro.core.fabric import DEFAULT_SPINE_X, DEFAULT_UPLINK_X
@@ -40,6 +42,7 @@ TRACE_MAKERS = {
     "poisson": make_poisson_trace,
     "bursty": make_bursty_trace,
     "mixed": make_mixed_trace,
+    "philly": make_philly_trace,
 }
 
 
@@ -122,17 +125,24 @@ class Scenario:
             kw.setdefault("rack_sizes", None)
         return dataclasses.replace(self, **kw) if kw else self
 
-    def build_cluster(self) -> ClusterTopology:
+    def build_cluster(self, naive_topology: bool = False) -> ClusterTopology:
+        """``naive_topology=True`` builds the retained linear-scan reference
+        implementation instead of the indexed one — an implementation A/B
+        (identical schedules, different wall-clock) used by the
+        differential tests and ``benchmarks/fig14_scale.py``; it is
+        deliberately NOT part of the scenario data or the artifact
+        provenance."""
+        cls = NaiveClusterTopology if naive_topology else ClusterTopology
         fabric_kw = dict(rack_uplink_bw=self.rack_uplink_bw,
                          spine_bw=self.spine_bw)
         if self.rack_sizes is not None:
-            return ClusterTopology(machines_per_rack=self.machines_per_rack,
-                                   gpus_per_machine=self.gpus_per_machine,
-                                   rack_sizes=self.rack_sizes, **fabric_kw)
-        return ClusterTopology(n_racks=self.n_racks,
-                               machines_per_rack=self.machines_per_rack,
-                               gpus_per_machine=self.gpus_per_machine,
-                               **fabric_kw)
+            return cls(machines_per_rack=self.machines_per_rack,
+                       gpus_per_machine=self.gpus_per_machine,
+                       rack_sizes=self.rack_sizes, **fabric_kw)
+        return cls(n_racks=self.n_racks,
+                   machines_per_rack=self.machines_per_rack,
+                   gpus_per_machine=self.gpus_per_machine,
+                   **fabric_kw)
 
     def _effective_nic_bw(self) -> float:
         """Per-participant network-tier bandwidth after bandwidth_scale —
@@ -206,8 +216,9 @@ class Scenario:
         return maker(archs, n_jobs=self.n_jobs, seed=seed, **kw)
 
     def build_sim(self, archs, policy: Optional[str] = None, seed: int = 0,
-                  comm: Optional[CommModel] = None) -> ClusterSimulator:
-        cluster = self.build_cluster()
+                  comm: Optional[CommModel] = None,
+                  naive_topology: bool = False) -> ClusterSimulator:
+        cluster = self.build_cluster(naive_topology=naive_topology)
         events = list(self.slowdown_events)
         if self.contention is not None:
             real = [m for m in range(cluster.n_machines)
@@ -403,3 +414,46 @@ register(Scenario(
     trace_kw={"families": ("dense", "vlm", "moe"),
               "demand_pmf": ((8, 0.25), (16, 0.35), (32, 0.25),
                              (64, 0.15))}))
+
+# -- datacenter scale (Hu et al. 2021: thousands of machines, 10k+ jobs) ------
+# Arrival rates scale with cluster size (constant offered load per GPU), so
+# the family traces one workload regime across 256/512/1024 machines.  These
+# are the cells the O(1) topology indexing exists for: a deep wait queue
+# probing capacity every round on a 1000+-machine cell.
+register(Scenario(
+    "dc-256",
+    description="256 machines (32 racks), 10k-job Poisson at peak load: "
+    "the smallest datacenter-scale cell (fig14 speedup reference)",
+    n_racks=32, trace="poisson", n_jobs=10_000,
+    trace_kw={"mean_interarrival": 120.0}))
+register(Scenario(
+    "dc-256-contended",
+    description="dc-256 on a fair-share fabric (default uplink/spine "
+    "capacities): datacenter scale with endogenous contention",
+    n_racks=32, contention_mode="fair-share",
+    trace="poisson", n_jobs=10_000,
+    trace_kw={"mean_interarrival": 120.0}))
+register(Scenario(
+    "dc-512",
+    description="512 machines (64 racks), 20k-job Poisson at the same "
+    "per-GPU load as dc-256",
+    n_racks=64, trace="poisson", n_jobs=20_000,
+    trace_kw={"mean_interarrival": 60.0}))
+register(Scenario(
+    "dc-1024",
+    description="1024 machines (128 racks), 50k-job Poisson at the same "
+    "per-GPU load as dc-256: the first four-digit-machine cell",
+    n_racks=128, trace="poisson", n_jobs=50_000,
+    trace_kw={"mean_interarrival": 30.0}))
+register(Scenario(
+    "dc-256-philly",
+    description="256 machines replaying a synthetic Philly-style trace "
+    "(single-GPU-dominated, short-median/long-tail runtimes, 10k jobs)",
+    n_racks=32, trace="philly", n_jobs=10_000,
+    trace_kw={"mean_interarrival": 20.0}))
+register(Scenario(
+    "dc-1024-philly",
+    description="1024 machines, 50k-job synthetic Philly-style trace: "
+    "the deep-queue small-job regime at full datacenter scale",
+    n_racks=128, trace="philly", n_jobs=50_000,
+    trace_kw={"mean_interarrival": 5.0}))

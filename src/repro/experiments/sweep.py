@@ -67,12 +67,17 @@ def sweep(scenarios: Sequence[str], policies: Sequence[str],
           n_jobs: Optional[int] = None, n_racks: Optional[int] = None,
           max_time: Optional[float] = None,
           contention: Optional[str] = None,
-          parallelism: Optional[str] = None) -> dict:
+          parallelism: Optional[str] = None,
+          naive_topology: bool = False) -> dict:
     """Run the full cross product and return the index dict."""
     out_dir = pathlib.Path(out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
     overrides = {"n_jobs": n_jobs, "n_racks": n_racks, "max_time": max_time,
                  "contention": contention, "parallelism": parallelism}
+    if naive_topology:
+        # implementation A/B (fig14 reference): artifacts stay identical,
+        # so only the index records that the slow path was timed
+        overrides["naive_topology"] = True
     tasks: List[Task] = [
         (sc, csv if (csv and get_scenario(sc).trace == "csv") else None,
          pol, seed, overrides)
@@ -127,6 +132,10 @@ def main(argv=None) -> None:
     ap.add_argument("--parallelism", default=None, choices=["auto"],
                     help="enable hybrid DP/TP/PP/EP plan assignment for "
                     "every scenario's trace (schema v3 artifacts)")
+    ap.add_argument("--naive-topology", action="store_true",
+                    help="time every cell on the retained linear-scan "
+                    "topology (identical artifacts, pre-indexing wall "
+                    "clock — the fig14 baseline)")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     args = ap.parse_args(argv)
@@ -144,7 +153,8 @@ def main(argv=None) -> None:
         [p for p in args.policies.split(",") if p],
         seeds, workers=args.workers, out_dir=args.out, csv=args.csv,
         n_jobs=args.n_jobs, n_racks=args.racks, max_time=args.max_time,
-        contention=args.contention, parallelism=args.parallelism)
+        contention=args.contention, parallelism=args.parallelism,
+        naive_topology=args.naive_topology)
     for r in index["runs"]:
         print(f"{r['scenario']:>18s} {r['policy']:>22s} seed{r['seed']} "
               f"makespan={r['makespan']/3600:8.1f}h "

@@ -1,0 +1,158 @@
+"""Differential tests: indexed ClusterTopology vs the retained naive
+linear-scan reference.
+
+The O(1) capacity indices (per-rack free counters, machine/rack free-level
+bucket counts, whole-free counters, lazy max hints) must be observationally
+IDENTICAL to re-scanning ``free`` — same placements machine-for-machine,
+same query answers, after any interleaving of allocate / release / retake /
+external free-list pokes.  ``NaiveClusterTopology`` keeps the original
+method bodies, so hypothesis driving both through random op sequences is a
+direct check of the refactor, and the artifact-digest test pins the same
+property end-to-end through the simulator."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import ClusterTopology, NaiveClusterTopology
+from repro.experiments import artifact_json, run_one
+
+LEVELS = ("machine", "rack", "network", "scatter")
+
+SHAPES = (
+    dict(n_racks=2),
+    dict(n_racks=3, machines_per_rack=4, gpus_per_machine=4),
+    dict(rack_sizes=(8, 4, 2, 1), gpus_per_machine=8),
+    dict(rack_sizes=(2, 6, 6, 3), gpus_per_machine=4),
+)
+
+
+def _pair(shape):
+    return ClusterTopology(**shape), NaiveClusterTopology(**shape)
+
+
+def _assert_same_state(fast, naive):
+    assert list(fast.free) == list(naive.free)
+    assert fast.free_gpus() == naive.free_gpus()
+    assert fast.max_free_on_machine() == naive.max_free_on_machine()
+    assert fast.max_free_on_rack() == naive.max_free_on_rack()
+    for r in range(fast.n_racks):
+        assert fast.rack_free(r) == naive.rack_free(r)
+        assert (fast.n_whole_free_machines(exclude_rack=r)
+                == naive.n_whole_free_machines(exclude_rack=r))
+    assert fast.n_whole_free_machines() == naive.n_whole_free_machines()
+    for g in (1, 2, 3, fast.gpus_per_machine, fast.max_rack_capacity,
+              fast.total_gpus, fast.total_gpus + 1):
+        assert fast.best_feasible_level(g) == naive.best_feasible_level(g)
+
+
+def _assert_index_consistent(cl):
+    """The incremental indices must equal a from-scratch recomputation."""
+    gpm, mpr = cl.gpus_per_machine, cl.machines_per_rack
+    free = list(cl.free)
+    assert cl.free_gpus() == sum(free)
+    for r in range(cl.n_racks):
+        base = r * mpr
+        assert cl.rack_free(r) == sum(free[base:base + mpr])
+    for k in range(gpm + 1):
+        assert cl._mach_bucket[k] == sum(1 for f in free if f == k)
+    assert cl.n_whole_free_machines() == sum(1 for f in free if f == gpm)
+    assert cl.max_free_on_machine() == max(free)
+    assert cl.max_free_on_rack() == max(cl.rack_free(r)
+                                        for r in range(cl.n_racks))
+
+
+@settings(max_examples=120, deadline=None)
+@given(shape=st.sampled_from(SHAPES),
+       ops=st.lists(
+           st.one_of(
+               st.tuples(st.just("alloc"), st.integers(1, 70),
+                         st.sampled_from(LEVELS)),
+               st.tuples(st.just("release"), st.integers(0, 1 << 30),
+                         st.just(None)),
+               # the simulator's upgrade-probe pattern: release a running
+               # placement, query, retake it unchanged
+               st.tuples(st.just("probe"), st.integers(0, 1 << 30),
+                         st.just(None))),
+           min_size=1, max_size=60))
+def test_differential_random_ops(shape, ops):
+    fast, naive = _pair(shape)
+    held = []
+    for op, arg, level in ops:
+        if op == "alloc":
+            pf = fast.allocate(arg, level)
+            pn = naive.allocate(arg, level)
+            assert pf == pn  # identical machines AND counts
+            if pf is not None:
+                held.append(pf)
+        elif op == "release" and held:
+            p = held.pop(arg % len(held))
+            fast.release(p)
+            naive.release(p)
+        elif op == "probe" and held:
+            p = held[arg % len(held)]
+            fast.release(p)
+            naive.release(p)
+            _assert_same_state(fast, naive)
+            fast.retake(p)
+            naive.retake(p)
+        _assert_same_state(fast, naive)
+        _assert_index_consistent(fast)
+    for p in held:
+        fast.release(p)
+        naive.release(p)
+    _assert_same_state(fast, naive)
+    assert fast.free_gpus() == fast.total_gpus
+
+
+def test_external_free_pokes_update_indices():
+    """Tests (and only tests) poke ``cluster.free[m]`` directly to build
+    synthetic occupancy; the write path must keep every index coherent."""
+    cl = ClusterTopology(n_racks=2)
+    for m in range(cl.n_machines):
+        cl.free[m] = 4
+    assert cl.max_free_on_machine() == 4
+    assert cl.max_free_on_rack() == 32
+    assert cl.free_gpus() == 64
+    assert cl.n_whole_free_machines() == 0
+    cl.free[3] = 8
+    assert cl.max_free_on_machine() == 8
+    assert cl.n_whole_free_machines() == 1
+    assert cl.n_whole_free_machines(exclude_rack=0) == 0
+    _assert_index_consistent(cl)
+
+
+def test_whole_free_counter_tracks_alloc_release():
+    cl = ClusterTopology(n_racks=2, machines_per_rack=2, gpus_per_machine=4)
+    assert cl.n_whole_free_machines() == 4
+    p = cl.allocate(4, "machine")
+    assert cl.n_whole_free_machines() == 3
+    q = cl.allocate(2, "machine")
+    assert cl.n_whole_free_machines() == 2
+    assert cl.n_whole_free_machines(exclude_rack=0) == 2
+    cl.release(p)
+    cl.release(q)
+    assert cl.n_whole_free_machines() == 4
+
+
+def test_max_hint_walks_down_after_bulk_allocation():
+    cl = ClusterTopology(n_racks=1)
+    big = cl.allocate(cl.total_gpus, "network")
+    assert cl.max_free_on_machine() == 0
+    assert cl.max_free_on_rack() == 0
+    assert cl.best_feasible_level(1) is None
+    cl.release(big)
+    assert cl.max_free_on_machine() == cl.gpus_per_machine
+
+
+@pytest.mark.parametrize("scenario,policy,n_jobs", [
+    ("smoke", "dally", 30),
+    ("hetero-racks", "tiresias", 24),
+    ("congested-spine", "scatter", 40),
+    ("dc-256", "dally", 120),
+])
+def test_naive_and_indexed_artifacts_byte_identical(scenario, policy, n_jobs):
+    """End-to-end differential: the topology implementation must be
+    invisible in the artifact bytes for whole simulated cells."""
+    fast = run_one(scenario, policy=policy, seed=2, n_jobs=n_jobs)
+    naive = run_one(scenario, policy=policy, seed=2, n_jobs=n_jobs,
+                    naive_topology=True)
+    assert artifact_json(fast) == artifact_json(naive)
