@@ -41,7 +41,13 @@ class Job:
     slow_factor: float = 1.0     # machine-slowdown factor of this placement
     iters_frac: float = 0.0      # partial iteration carried across re-prices
     run_start: float = 0.0       # when the current run segment started
-    last_assignment_time: Optional[float] = None  # for T_starvation
+    # when the job last changed resource state: set to `now` at every
+    # _start and at every preemption.  It anchors BOTH the starvation
+    # clock (T_starvation, while waiting) AND preemption/upgrade
+    # eligibility (while running) — unlike run_start it is never reset by
+    # progress folds or fair-share re-pricing, so eligibility keeps
+    # accruing for contended jobs.
+    last_assignment_time: Optional[float] = None
     wait_since: float = 0.0      # when the job (re)entered the wait queue
     finish_time: Optional[float] = None
     preemptions: int = 0

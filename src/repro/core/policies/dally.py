@@ -124,8 +124,11 @@ class DallyPolicy(Policy):
         # thousands of jobs at datacenter scale.  Placements of OTHER jobs
         # never change inside the loop, so filtering up front is decision-
         # identical to the old skip-inside-sorted-loop.
+        # eligibility anchors on last_assignment_time: _reprice resets
+        # run_start on every shared-fabric fold, which silently disabled
+        # upgrades for contended jobs — the ones that need them most
         cands = [j for j in sim.running_scattered
-                 if now - j.run_start >= self.upgrade_min_runtime]
+                 if now - j.last_assignment_time >= self.upgrade_min_runtime]
         done = 0
         for job in sorted(cands, key=lambda j: j.nw_sens(now)):
             if done >= self.upgrades_per_round:
@@ -171,7 +174,8 @@ class DallyPolicy(Policy):
             for t in sim.running:
                 if (self._rack_scale(t) != 0.0
                         or not self._runs_cheap(t)
-                        or now - t.run_start < self.upgrade_min_runtime):
+                        or (now - t.last_assignment_time
+                            < self.upgrade_min_runtime)):
                     continue
                 racks = {m // cl.machines_per_rack
                          for m, _ in t.placement.alloc}

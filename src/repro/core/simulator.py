@@ -317,9 +317,16 @@ class ClusterSimulator:
                               key=lambda j: (prio(j), j.arrival, j.job_id))
                 if self.cluster.free_gpus() < top.n_gpus:
                     top_p = prio(top)
+                    # eligibility anchors on when the job was ASSIGNED its
+                    # resources, not on run_start: _progress/_reprice reset
+                    # run_start at every fold, so under shared-fabric
+                    # contention a re-priced job's clock restarted forever
+                    # and preemption never tripped — exactly the congested
+                    # regime it exists for
                     victims = sorted(
                         (j for j in self.running
-                         if now - j.run_start > self.preemption_min_runtime
+                         if now - j.last_assignment_time
+                         > self.preemption_min_runtime
                          and prio(j) > top_p + self.policy.preemption_margin),
                         key=lambda j: -prio(j))
                     freed = self.cluster.free_gpus()
@@ -405,7 +412,11 @@ class ClusterSimulator:
                 self._enqueue(job, t)
                 self._scheduling_round(t)
             elif kind == ROUND:
-                if self.waiting:
+                # running jobs alone are enough to owe a round: the
+                # policy's per-round consolidation upgrades and rack
+                # yields (§VI-3) must not stall on a quiet cluster until
+                # the next arrival or completion
+                if self.waiting or self.running:
                     self._scheduling_round(t)
                 self.timeline.record(
                     t, self.cluster.total_gpus - self.cluster.free_gpus(),

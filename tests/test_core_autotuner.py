@@ -74,8 +74,8 @@ def test_bucket_emptied_by_aging_falls_back_to_aggregate():
 
 
 def test_cache_invalidated_on_update_demand_delay():
-    """get_tuned_timers memoizes on (g, now); a new observation must not
-    serve the stale cached value for the same key."""
+    """get_tuned_timers memoizes per (tier, demand) bucket; a new
+    observation must not serve the stale cached value."""
     t = AutoTuner()
     t.update_demand_delay("machine", 10.0, 8, now=0.0)
     before = t.get_tuned_timers(8, now=5.0)
@@ -99,6 +99,64 @@ def test_cache_invalidated_across_tiers_and_demands():
     t.update_demand_delay("machine", 20.0, 8, now=1.0)
     # g=64 now borrows the tier aggregate instead of the stale default
     assert t.get_tuned_timers(64, now=1.0)[0] == 20.0
+
+
+def _reference_timers(entries, g, now, limit, defaults):
+    """The uncached Algo-2 math, recomputed from scratch: per-(tier, g)
+    age window -> tier-wide aggregate -> default.  Entry order matters for
+    float-sum reassociation, so it mirrors the tuner's (insertion-ordered
+    buckets, append-ordered entries)."""
+    out = []
+    for tier in ("machine", "rack"):
+        xs = [w for (t2, g2), dq in entries.items() if (t2, g2) == (tier, g)
+              for (ts, w) in dq if now - ts <= limit]
+        if not xs:
+            xs = [w for (t2, _), dq in entries.items() if t2 == tier
+                  for (ts, w) in dq if now - ts <= limit]
+        if not xs:
+            out.append(defaults[tier])
+            continue
+        mean = sum(xs) / len(xs)
+        var = sum((x - mean) ** 2 for x in xs) / max(len(xs) - 1, 1)
+        out.append(mean + 2.0 * math.sqrt(var))
+    return tuple(out)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["update", "query"]),
+              st.sampled_from(["machine", "rack"]),
+              st.sampled_from([1, 4, 8, 64]),
+              st.floats(0.0, 5e4),
+              st.floats(0.0, 50.0)),
+    min_size=1, max_size=60))
+def test_cached_timers_bit_identical_to_uncached_reference(ops):
+    """Pin: the bucket/aggregate caches with expiry-based invalidation
+    return values BIT-IDENTICAL to the uncached recomputation, across
+    arbitrary interleavings of updates and queries with advancing time
+    (including entries aging out between two queries of the same g)."""
+    from collections import deque
+
+    limit = 100.0
+    t = AutoTuner(history_time_limit=limit,
+                  default_machine=111.0, default_rack=222.0)
+    shadow = {}
+    now = 0.0
+    for kind, tier, g, wait, dt in ops:
+        now += dt  # monotonic clock, matching the simulator's use
+        if kind == "update":
+            t.update_demand_delay(tier, wait, g, now)
+            shadow.setdefault((tier, g), deque()).append((now, wait))
+        else:
+            got = t.get_tuned_timers(g, now)
+            # the tuner's defaultdict creates (tier, g) keys on query as
+            # well as on update; bucket ORDER feeds the fallback's float
+            # sum, so the shadow mirrors the key-creation sequence exactly
+            for tier2 in ("machine", "rack"):
+                shadow.setdefault((tier2, g), deque())
+            want = _reference_timers(shadow, g, now, limit,
+                                     {"machine": 111.0, "rack": 222.0})
+            assert got == want  # exact float equality, not approx
 
 
 @settings(max_examples=40, deadline=None)

@@ -106,6 +106,77 @@ def test_max_time_truncation_accounts_running_jobs():
     assert res["n_unfinished"] == 30 - res["n_finished"]
 
 
+# -- eligibility clocks (preemption / upgrades under re-pricing) -------------
+
+def test_contended_job_stays_preemption_eligible_across_reprices():
+    """Regression: _reprice folds progress and resets run_start on every
+    shared-fabric churn event, so a long-running contended job's
+    `now - run_start` never exceeded preemption_min_runtime — preemption
+    was silently disabled exactly in the congested regime it exists for.
+    Eligibility now anchors on last_assignment_time (when the job was
+    handed its resources), which re-pricing must not touch."""
+    from repro.core import FairShareFabric
+    from repro.core.job import Job
+
+    cl = ClusterTopology(n_racks=4, machines_per_rack=1, gpus_per_machine=4,
+                         spine_bw=25e9)
+    sim = ClusterSimulator(cl, make_policy("dally"), COMM,
+                           fabric=FairShareFabric(cl, nic_bw=25e9),
+                           preemption_min_runtime=600.0)
+    # job 0: long-running, cross-rack (6 > any rack), repriced at every
+    # churn event below; mild exposed comm keeps nw_sens well above the
+    # preemption margin
+    sim.submit(Job(job_id=0, model="minicpm3-4b", n_gpus=6,
+                   total_iters=1_000_000, compute_time_per_iter=1.0,
+                   arrival=0.0))
+    # churn: short cross-rack jobs on the OTHER two racks, arriving every
+    # 400s through the whole horizon and finishing in ~220s, so they never
+    # queue up — their only effect is re-pricing job 0's spine share at
+    # each start and completion.  Under the old run_start anchor job 0's
+    # clock therefore never reached preemption_min_runtime.
+    for k in range(1, 12):
+        sim.submit(Job(job_id=k, model="minicpm3-4b", n_gpus=6,
+                       total_iters=150, compute_time_per_iter=1.0,
+                       arrival=k * 400.0))
+    # the starved giant (whole cluster): every round from t=2100 on takes
+    # the preemption path with job 0 as the only runtime-eligible victim
+    sim.submit(Job(job_id=99, model="minicpm3-4b", n_gpus=16, total_iters=10,
+                   compute_time_per_iter=1.0, arrival=2100.0))
+    sim.run(max_time=4000.0)
+    assert sim.n_reprices > 0, "churn must actually re-price job 0"
+    assert sim.jobs[0].preemptions >= 1, (
+        "job 0 held its placement for > preemption_min_runtime and must be "
+        "preemption-eligible despite re-pricing resetting run_start")
+
+
+def test_quiet_cluster_still_runs_consolidation_rounds():
+    """Regression: periodic ROUND events skipped _scheduling_round whenever
+    the wait queue was empty, so Dally's per-round consolidation upgrades
+    stalled until the next arrival or completion.  A scattered job on an
+    otherwise quiet cluster must be upgraded by a plain round."""
+    from repro.core.job import Job
+
+    cl = ClusterTopology(n_racks=2, machines_per_rack=1, gpus_per_machine=8)
+    sim = ClusterSimulator(cl, make_policy("dally-nowait"), COMM)
+    # two short blockers occupy 6 GPUs of each machine
+    sim.submit(Job(job_id=1, model="yi-9b", n_gpus=6, total_iters=3000,
+                   compute_time_per_iter=0.1, arrival=0.0))
+    sim.submit(Job(job_id=2, model="yi-9b", n_gpus=6, total_iters=3000,
+                   compute_time_per_iter=0.1, arrival=0.0))
+    # the victim: forced to scatter 2+2 across both racks (network tier)
+    sim.submit(Job(job_id=3, model="yi-9b", n_gpus=4, total_iters=200_000,
+                   compute_time_per_iter=0.1, arrival=0.0))
+    res = sim.run()
+    assert res["n_finished"] == 3
+    job = sim.jobs[3]
+    # blockers finish well before job 3 becomes upgrade-eligible (900s),
+    # after which ONLY quiet periodic rounds can trigger the migration
+    assert max(sim.jobs[1].finish_time, sim.jobs[2].finish_time) < 900.0
+    assert job.preemptions >= 1, (
+        "scattered job must be consolidation-upgraded by a periodic round "
+        "on a quiet cluster (no arrivals, no completions pending)")
+
+
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 100), racks=st.sampled_from([1, 2]))
 def test_capacity_never_oversubscribed_property(seed, racks):

@@ -22,6 +22,12 @@ EXPECTED = {
         "6990ef4b197f915f50867e3e7128a7da679649dd609dbc1412359882521dcf1f",
     ("hetero-racks", "tiresias", 1, 18):
         "d01f0285149aa843453cf67b5748a4c57a42fd0c63fa8d0983a04c54f4a83732",
+    # datacenter-scale cell (256 machines, lightly loaded): pins the O(1)
+    # topology indices' placement decisions at scale.  Both the indexed
+    # and the naive reference implementation must hash to this (see
+    # tests/test_topology_index.py for the full differential suite).
+    ("dc-256", "dally", 0, 80):
+        "45d85c19d322bafdc73eaf17983a191cd38ed0ec69b565edc0d84d107f94c236",
 }
 
 
