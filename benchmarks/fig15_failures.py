@@ -1,0 +1,99 @@
+"""Fig. 15 (beyond the paper): scheduling under machine failures & churn.
+
+Real GPU datacenters lose machines to hardware faults and maintenance all
+the time (Hu et al., 2021), and every lost machine kills the placements
+intersecting it.  This benchmark runs the failure-prone scenario (batch
+workload under seeded MTBF/MTTR machine churn, 2-minute checkpoint-restore
+surcharge per lost placement) for every policy while the per-machine MTBF
+shrinks, against the same workload with failures off.  Consolidated
+placements intersect fewer machines, so each failure kills fewer jobs —
+the headline rows are Dally's makespan reduction vs the scatter baseline
+at each churn level, and each policy's exposed-communication degradation
+as churn pushes re-placed jobs onto worse tiers.
+
+    python -m benchmarks.fig15_failures           # full: 400-job cells
+    python -m benchmarks.fig15_failures --small   # CI smoke: 80-job cells
+
+Writes benchmarks/artifacts/fig15_failures.json; `perf_gate.py` times a
+failure-heavy cell as the `failures_small` benchmark, and
+tests/test_failures.py pins the dally-beats-scatter acceptance claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .common import row, run_one_timed, save
+
+POLICIES = ["scatter", "gandiva", "tiresias", "dally"]
+SCENARIO = "failure-prone"
+SEED = 0
+
+# the churn axis: per-machine MTBF in hours, None = failures off
+FULL_MTBFS = (None, 48, 24, 8)
+SMALL_MTBFS = (None, 24, 8)
+
+
+def _label(mtbf_h):
+    return "off" if mtbf_h is None else f"mtbf-{mtbf_h}h"
+
+
+def _cells(base, mtbf_h, n_jobs):
+    if mtbf_h is None:
+        # with_overrides drops None values, so failures-off needs an
+        # explicit replace.  checkpoint_overhead stays: ordinary
+        # preemptions pay the same restore surcharge in every cell, so
+        # the off-vs-churn delta measures churn alone
+        sc = dataclasses.replace(base, failure_mode=None, failure_kw={})
+    else:
+        sc = dataclasses.replace(
+            base, failure_kw={**dict(base.failure_kw),
+                              "mtbf": mtbf_h * 3600.0})
+    out = {}
+    for pol in POLICIES:
+        m = run_one_timed(sc, policy=pol, seed=SEED, n_jobs=n_jobs)["metrics"]
+        out[pol] = {
+            "makespan_hours": m["makespan"] / 3600,
+            "total_comm_hours": m["total_comm_time"] / 3600,
+            "n_job_failures": m.get("n_job_failures", 0),
+            "n_machine_failures": m.get("n_machine_failures", 0),
+        }
+    return out
+
+
+def main(small=False):
+    from repro.experiments import get_scenario
+    n_jobs = 80 if small else 400
+    base = get_scenario(SCENARIO)
+    out = {"mode": "small" if small else "full", "n_jobs": n_jobs,
+           "levels": {}}
+    for mtbf_h in SMALL_MTBFS if small else FULL_MTBFS:
+        label = _label(mtbf_h)
+        cells = _cells(base, mtbf_h, n_jobs)
+        out["levels"][label] = cells
+        for pol in POLICIES:
+            row(f"fig15.makespan_hours.{label}.{pol}",
+                round(cells[pol]["makespan_hours"], 1),
+                f"{cells[pol]['n_job_failures']} placements lost")
+        sc, da = cells["scatter"], cells["dally"]
+        row(f"fig15.dally_vs_scatter_makespan_reduction_pct.{label}",
+            round(100 * (sc["makespan_hours"] - da["makespan_hours"])
+                  / max(sc["makespan_hours"], 1e-9), 1),
+            "acceptance: > 0 whenever churn is on")
+    # exposed-comm degradation at the harshest churn level vs failures off
+    harshest = _label((SMALL_MTBFS if small else FULL_MTBFS)[-1])
+    for pol in POLICIES:
+        off = out["levels"]["off"][pol]["total_comm_hours"]
+        on = out["levels"][harshest][pol]["total_comm_hours"]
+        row(f"fig15.exposed_comm_degradation_pct.{harshest}.{pol}",
+            round(100 * (on - off) / max(off, 1e-9), 1),
+            "re-placed jobs land on worse tiers as MTBF shrinks")
+    save("fig15_failures", out)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--small", action="store_true",
+                    help="CI-sized cells (80 jobs)")
+    main(small=ap.parse_args().small)

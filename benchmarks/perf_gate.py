@@ -79,10 +79,28 @@ def _time_fig14_small() -> float:
     return time.perf_counter() - t0
 
 
+def _time_failures_small() -> float:
+    # failure-heavy cell: short-MTBF churn on a congested batch — the FAIL
+    # handler's victim scan, capacity masking, and post-failure rounds are
+    # all hot here; guards the churn subsystem's wall-clock
+    import dataclasses
+
+    from repro.experiments import get_scenario, run_one
+    sc = dataclasses.replace(
+        get_scenario("failure-prone"),
+        failure_kw={**dict(get_scenario("failure-prone").failure_kw),
+                    "mtbf": 6 * 3600.0, "mttr": 1800.0})
+    t0 = time.perf_counter()
+    run_one(sc, policy="dally", seed=0, n_jobs=400)
+    run_one(sc, policy="scatter", seed=0, n_jobs=400)
+    return time.perf_counter() - t0
+
+
 BENCHMARKS = {
     "fig7_small": _time_fig7_small,
     "smoke_sweep": _time_smoke_sweep,
     "fig14_small": _time_fig14_small,
+    "failures_small": _time_failures_small,
 }
 
 

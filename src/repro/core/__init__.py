@@ -14,6 +14,7 @@ Components (paper §IV):
   policies    — Dally (Algo 1 + Nw_sens preemption), Tiresias, Gandiva,
                 Dally-manual / -noWait / -fullyConsolidated
   trace       — batch + Poisson workload generators (SenseTime-like stats)
+                + machine failure/maintenance schedules (MTBF/MTTR churn)
   metrics     — makespan / JCT / queueing delay / communication latency
 """
 from .autotuner import AutoTuner  # noqa: F401
@@ -33,7 +34,9 @@ from .trace import (  # noqa: F401
     make_batch_trace,
     make_bursty_trace,
     make_mixed_trace,
+    make_mtbf_failures,
     make_philly_trace,
     make_poisson_trace,
+    make_rolling_maintenance,
     save_csv_trace,
 )

@@ -51,6 +51,7 @@ class Job:
     wait_since: float = 0.0      # when the job (re)entered the wait queue
     finish_time: Optional[float] = None
     preemptions: int = 0
+    failures: int = 0            # placements lost to machine failures
     started_once: bool = False
 
     def remaining_iters(self) -> int:

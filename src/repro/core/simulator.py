@@ -7,9 +7,19 @@ placement" behaviour that distinguishes ArtISt-sim from static-penalty
 simulators (paper §IV-C, Fig. 6).
 
 Events: job arrival, scheduling round (period `round_period`), job
-completion, optional machine-slowdown (straggler) events.  Preemption saves
-(iters_done, optimizer state) and restores after `restore_time` — the paper's
-checkpoint/resume contract (§IV-B).
+completion, optional machine-slowdown (straggler) events, and optional
+machine FAIL/RECOVER events (hardware failures / maintenance churn).
+Preemption saves (iters_done, optimizer state) and restores after
+`restore_time` — the paper's checkpoint/resume contract (§IV-B).
+
+A machine failure kills every placement intersecting it: the victims'
+whole completed iterations survive (the per-iteration checkpoint), the
+in-flight partial iteration since the last checkpoint is lost, and the
+jobs re-enqueue with preemption semantics (wait/starvation clocks restart
+at the crash instant) to pay `restore_time` + `checkpoint_overhead` when
+they next start.  The machine's capacity is masked out of the topology's
+O(1) indices while it is down, and surviving cross-rack contenders are
+re-priced through the shared fabric (the contending set shrank).
 
 With a shared-fabric model attached (``fabric``), jobs endogenously slow
 each other down: whenever the set of cross-rack placements changes
@@ -31,7 +41,7 @@ from .job import Job
 from .metrics import Timeline
 from .topology import ClusterTopology
 
-ARRIVAL, ROUND, COMPLETE, SLOWDOWN = 0, 1, 2, 3
+ARRIVAL, ROUND, COMPLETE, SLOWDOWN, FAIL, RECOVER = 0, 1, 2, 3, 4, 5
 
 _WAIT_KEY = attrgetter("_wait_key")
 
@@ -43,6 +53,7 @@ class ClusterSimulator:
                  preemption_min_runtime: float = 1800.0,
                  max_preemptions_per_round: int = 4,
                  slowdown_events: Optional[List] = None,
+                 failure_events: Optional[List] = None,
                  fabric: Optional[FairShareFabric] = None,
                  event_hook: Optional[Callable] = None):
         self.cluster = cluster
@@ -85,6 +96,30 @@ class ClusterSimulator:
         self.machine_slowdown: Dict[int, float] = {}
         for t, machine, factor in (slowdown_events or []):
             self._push(t, SLOWDOWN, (machine, factor))
+        # machine failure/maintenance schedule: (t, "fail"|"recover", m)
+        # triples (see repro.core.trace.make_mtbf_failures /
+        # make_rolling_maintenance).  `failure_events is not None` — even
+        # an empty list — marks the churn subsystem enabled, which gates
+        # the failure keys in results() (failure-off artifacts must stay
+        # byte-identical to the legacy schemas).
+        self._failures_enabled = failure_events is not None
+        self.n_machine_failures = 0
+        self.n_job_failures = 0
+        # machine -> {job_id: running job} victim index, maintained only
+        # under a failure schedule: a FAIL event touches exactly its own
+        # victims instead of scanning the (datacenter-scale) running set,
+        # and failure-off runs pay nothing.  Insertion order is
+        # deterministic, and victim order is observationally neutral
+        # anyway (crashed jobs re-sort by priority key in the wait queue).
+        self._jobs_on_machine: Dict[int, Dict[int, Job]] = {}
+        # coalesce the post-churn scheduling round over a same-instant
+        # burst (a maintenance batch boundary recovers one batch and
+        # fails the next at the identical timestamp): react once, after
+        # the last notice, not once per machine
+        self._churn_dirty = False
+        for t, kind, machine in (failure_events or []):
+            assert kind in ("fail", "recover"), kind
+            self._push(t, FAIL if kind == "fail" else RECOVER, machine)
         self._completion_version: Dict[int, int] = {}
         self._pending_arrivals = 0
 
@@ -168,6 +203,9 @@ class ClusterSimulator:
         job.started_once = True
         job.last_assignment_time = now
         self.running.append(job)
+        if self._failures_enabled:
+            for m, _ in placement.alloc:
+                self._jobs_on_machine.setdefault(m, {})[job.job_id] = job
         if tier != "machine":
             self.running_scattered.append(job)
         self.waiting.remove(job)
@@ -177,33 +215,72 @@ class ClusterSimulator:
         self._push(t_end, COMPLETE, (job.job_id, v))
 
     def _progress(self, job: Job, now: float):
-        """Account the progress of a running job up to `now`."""
+        """Account the progress of a running job up to `now`.
+
+        The re-price-carried partial iteration (``iters_frac``) counts
+        towards the whole-iteration fold exactly as in ``_reprice``: a
+        job at frac 0.8 that runs another 0.5 iterations has COMPLETED
+        (and checkpointed) one whole iteration, which an eviction must
+        not re-do.  Fabric-off runs always have frac == 0.0, so their
+        arithmetic — and the pinned golden artifacts — are bit-identical."""
         elapsed = max(now - job.run_start, 0.0)
-        iters = min(int(elapsed / max(job.iter_time, 1e-9)),
-                    job.remaining_iters())
+        done_f = elapsed / max(job.iter_time, 1e-9) + job.iters_frac
+        iters = min(int(done_f), job.remaining_iters())
         job.iters_done += iters
         job.t_run += elapsed
         job.comm_time += iters * getattr(job, "exposed_comm_per_iter", 0.0)
+        job.iters_frac = done_f - iters if job.remaining_iters() else 0.0
         job.run_start = now
 
-    def preempt(self, job: Job, now: float):
+    def _evict(self, job: Job, now: float):
+        """Shared teardown of a running job's placement (preemption and
+        machine-failure crash): fold progress, free the GPUs, invalidate
+        the pending COMPLETE, and re-enqueue at the wait-queue tail."""
         self._progress(job, now)
         self._touch_fabric(job.placement)
+        self._untrack(job)
         self.cluster.release(job.placement)
         if job.placement_tier != "machine":
             self.running_scattered.remove(job)
         job.placement = None
         job.placement_tier = None
-        job.preemptions += 1
         self._completion_version[job.job_id] += 1  # invalidate completion
         self.running.remove(job)
         job.wait_since = now
         # starvation clock restarts: the job HELD resources until now, so its
-        # wait towards the delay timers begins at the preemption instant
+        # wait towards the delay timers begins at the eviction instant
         # (otherwise run time would count as starvation and poison Algo 2's
         # wait-time lists)
         job.last_assignment_time = now
         self._enqueue(job, now, tail=True)
+
+    def _untrack(self, job: Job):
+        """Drop a job (whose placement is being torn down) from the
+        per-machine victim index."""
+        if self._failures_enabled:
+            for m, _ in job.placement.alloc:
+                del self._jobs_on_machine[m][job.job_id]
+
+    def preempt(self, job: Job, now: float):
+        self._evict(job, now)
+        job.preemptions += 1
+
+    def _crash(self, job: Job, now: float):
+        """The job's placement intersects a machine that just died.  Same
+        resource teardown as preemption, with crash bookkeeping: the
+        in-flight *partial* iteration since the last per-iteration
+        checkpoint is lost (``_progress`` folds whole iterations only,
+        and ``_start`` discards the residual fraction when the job next
+        places — for crashes and preemptions alike), the wall time it
+        took still counts in ``t_run`` (the GPUs were genuinely busy),
+        and the loss is tallied under ``failures`` rather than
+        ``preemptions`` — a crash is not a scheduling decision.  The
+        restore surcharge (``restore_time + checkpoint_overhead``) is
+        charged by ``_start`` when the job next places, exactly like a
+        preemption restore."""
+        self._evict(job, now)
+        job.failures += 1
+        self.n_job_failures += 1
 
     def migrate(self, job: Job, level: str, now: float):
         """Migration = preempt + immediate restart at the given level."""
@@ -373,15 +450,9 @@ class ClusterSimulator:
             if it == job.iter_time:
                 continue
             if now > job.run_start:
-                elapsed = now - job.run_start
-                done_f = elapsed / job.iter_time + job.iters_frac
-                whole = min(int(done_f), job.remaining_iters())
-                job.iters_done += whole
-                job.t_run += elapsed
-                job.comm_time += whole * job.exposed_comm_per_iter
-                job.iters_frac = (done_f - whole if job.remaining_iters()
-                                  else 0.0)
-                job.run_start = now
+                # the guard matters: a job mid-restore has run_start in
+                # the future, and folding would erase its restore delay
+                self._progress(job, now)
             job.iter_time = it
             job.exposed_comm_per_iter = exposed
             v = self._completion_version[job.job_id] + 1
@@ -418,8 +489,13 @@ class ClusterSimulator:
                 # the next arrival or completion
                 if self.waiting or self.running:
                     self._scheduling_round(t)
+                # busy = total - free - failed: a dead machine's masked
+                # GPUs are neither free nor doing work, so counting them
+                # busy would inflate utilization for every churn cell
+                # (failed == 0 on churn-free clusters: bytes unchanged)
                 self.timeline.record(
-                    t, self.cluster.total_gpus - self.cluster.free_gpus(),
+                    t, self.cluster.total_gpus - self.cluster.free_gpus()
+                    - self.cluster.failed_gpus(),
                     self.cluster.total_gpus,
                     len(self.waiting) + len(self.running))
                 # re-arm only while work exists or is still due: pending
@@ -437,6 +513,7 @@ class ClusterSimulator:
                 job.iters_done = job.total_iters
                 job.finish_time = t
                 self._touch_fabric(job.placement)
+                self._untrack(job)
                 self.cluster.release(job.placement)
                 if job.placement_tier != "machine":
                     self.running_scattered.remove(job)
@@ -448,6 +525,37 @@ class ClusterSimulator:
             elif kind == SLOWDOWN:
                 machine, factor = payload
                 self.machine_slowdown[machine] = factor
+            elif kind == FAIL:
+                # idempotent: a duplicate failure notice for an already-
+                # dead machine is dropped (arbitrary schedule interleavings
+                # — overlapping maintenance + hardware faults — stay safe)
+                if not self.cluster.is_failed(payload):
+                    self.n_machine_failures += 1
+                    victims = list(
+                        self._jobs_on_machine.get(payload, {}).values())
+                    for job in victims:
+                        self._crash(job, t)
+                    self.cluster.fail_machine(payload)
+                    self._churn_dirty = True
+            elif kind == RECOVER:
+                if self.cluster.is_failed(payload):
+                    self.cluster.recover_machine(payload)
+                    self._churn_dirty = True
+            if self._churn_dirty and not (
+                    self.events and self.events[0][0] == t
+                    and self.events[0][1] in (FAIL, RECOVER)):
+                # capacity changed: victims re-place (elsewhere) right
+                # away if anything fits, waiting jobs and consolidation
+                # upgrades claim fresh capacity, and the shrunk cluster
+                # may demand preemptions — without stalling until the
+                # next round tick.  The round runs ONCE per same-instant
+                # churn burst (after its last event): a zero-gap
+                # maintenance handoff recovers one batch and fails the
+                # next at the identical timestamp, and reacting mid-burst
+                # would schedule against the transiently doubled outage.
+                self._churn_dirty = False
+                if self.waiting or self.running:
+                    self._scheduling_round(t)
             if self._fabric_dirty:
                 self._fabric_dirty = False
                 self._reprice(t)
@@ -467,4 +575,8 @@ class ClusterSimulator:
             # only under a shared fabric: adding the key unconditionally
             # would break v1 artifact byte-compatibility
             out["n_reprices"] = self.n_reprices
+        if self._failures_enabled:
+            # only under a failure schedule, for the same reason
+            out["n_machine_failures"] = self.n_machine_failures
+            out["n_job_failures"] = self.n_job_failures
         return out

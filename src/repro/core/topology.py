@@ -38,6 +38,21 @@ rack choice, and the stable most-free-first rack fill at network level
 are all preserved, which ``NaiveClusterTopology`` — the original
 linear-scan implementation, retained as the differential-test and
 benchmark reference — pins.
+
+Machine failures
+----------------
+``fail_machine`` / ``recover_machine`` mask a machine's capacity while it
+is down (hardware failure or maintenance): its free GPUs drop to zero
+through the single ``_set_free`` write path, so every incremental index
+stays exact and no allocation path can ever land on a dead machine (they
+all skip zero-free machines).  ``total_gpus`` is invariant — the masked
+capacity is accounted under ``failed_gpus()`` so GPU conservation reads
+``allocated + free + failed == total``.  Callers (the simulator) must
+release every placement intersecting the machine *before* failing it;
+``fail_machine`` asserts the machine is fully free.  Both operations are
+inherited unchanged by ``NaiveClusterTopology``, whose linear scans see
+the masked ``free`` list and therefore answer every capacity query
+identically under failures.
 """
 from __future__ import annotations
 
@@ -135,6 +150,9 @@ class ClusterTopology:
         self.rack_uplink_bw = rack_uplink_bw
         self.spine_bw = spine_bw
         self._links_cache = {}
+        # failed (masked) machines: id -> capacity masked at fail time
+        self._failed = {}
+        self._failed_gpus = 0
 
     # ------------------------------------------------------------------
     def _set_free(self, m: int, new: int):
@@ -144,6 +162,10 @@ class ClusterTopology:
         if new == old:
             return
         assert 0 <= new <= self.gpus_per_machine, (m, new)
+        # a dead machine's free count is pinned at 0 until recovery; only
+        # recover_machine (which un-registers first) may write it again
+        assert not self._failed or m not in self._failed, \
+            f"write to failed machine {m}"
         list.__setitem__(self.free, m, new)
         gpm = self.gpus_per_machine
         r = m // self.machines_per_rack
@@ -229,6 +251,47 @@ class ClusterTopology:
         if self._free_total >= g:
             return "network"
         return None
+
+    # -- machine failure / recovery ------------------------------------
+    def machine_capacity(self, m: int) -> int:
+        """GPUs this machine slot holds when healthy: ``gpus_per_machine``
+        for real machines, 0 for the ghost stride slots of short racks."""
+        r, slot = divmod(m, self.machines_per_rack)
+        return self.gpus_per_machine if slot < self.rack_sizes[r] else 0
+
+    def is_failed(self, m: int) -> bool:
+        return m in self._failed
+
+    def failed_gpus(self) -> int:
+        """Capacity currently masked by failed machines.  GPU conservation
+        under churn reads ``allocated + free_gpus() + failed_gpus() ==
+        total_gpus``."""
+        return self._failed_gpus
+
+    def failed_machines(self) -> List[int]:
+        return sorted(self._failed)
+
+    def fail_machine(self, m: int):
+        """Take machine ``m`` down: mask its capacity out of every free
+        index.  The caller must have released every placement that
+        intersects it first (the simulator kills those jobs before
+        failing the machine), so the machine is fully free here."""
+        assert 0 <= m < self.n_machines, m
+        assert m not in self._failed, f"machine {m} already failed"
+        cap = self.machine_capacity(m)
+        assert list.__getitem__(self.free, m) == cap, \
+            f"fail_machine({m}) with live placements on it"
+        self._set_free(m, 0)   # single write path: all indices stay exact
+        self._failed[m] = cap
+        self._failed_gpus += cap
+
+    def recover_machine(self, m: int):
+        """Bring a failed machine back: unmask its capacity."""
+        assert m in self._failed, f"machine {m} is not failed"
+        cap = self._failed.pop(m)
+        self._failed_gpus -= cap
+        assert list.__getitem__(self.free, m) == 0
+        self._set_free(m, cap)
 
     # ------------------------------------------------------------------
     def _pack_machines(self, machine_ids, g: int) -> Optional[list]:

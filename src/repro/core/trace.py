@@ -280,6 +280,134 @@ def make_philly_trace(archs: Sequence, n_jobs: int = 10_000, seed: int = 0,
 
 
 # ---------------------------------------------------------------------------
+# Machine failure / maintenance schedules
+# ---------------------------------------------------------------------------
+# Hardware failures and maintenance churn are a first-order effect on
+# JCT/makespan in real GPU datacenters (Hu et al., "Characterization and
+# Prediction of Deep Learning Workloads in Large-Scale GPU Datacenters"):
+# capacity comes and goes while the scheduler runs.  A failure schedule is
+# a sorted list of (t, "fail"|"recover", machine_id) events consumed by
+# ``ClusterSimulator(failure_events=)``.  Every failure ALWAYS carries its
+# matching recovery (recoveries may land past the horizon): a machine that
+# never came back could strand waiting jobs whose demand exceeds the
+# surviving capacity, wedging the round loop forever.
+
+FAILURE_MODES = (None, "mtbf", "maintenance")
+
+# default knobs per mode, resolved (and recorded) by the experiment layer
+MTBF_DEFAULTS = dict(
+    mtbf=24 * 3600.0,        # mean time between failures, per machine
+    mttr=3600.0,             # mean time to repair
+    horizon=7 * 24 * 3600.0,  # no new failures after this
+    scope=1.0,               # fraction of machines that ever fail
+)
+MAINTENANCE_DEFAULTS = dict(
+    start=6 * 3600.0,        # first batch goes down at this time
+    window=3600.0,           # per-batch downtime
+    batch_size=1,            # machines down simultaneously
+    gap=0.0,                 # idle time between consecutive batches
+    rounds=1,                # full passes over the machine list
+)
+
+
+def resolve_failure_kw(mode: str, kw: Optional[dict] = None) -> dict:
+    """Mode defaults merged with overrides; unknown keys are an error (a
+    typo'd knob silently falling back to its default would corrupt the
+    artifact provenance that records the resolved values)."""
+    defaults = {"mtbf": MTBF_DEFAULTS,
+                "maintenance": MAINTENANCE_DEFAULTS}.get(mode)
+    if defaults is None:
+        raise ValueError(
+            f"unknown failure mode {mode!r}; known: "
+            f"{', '.join(str(m) for m in FAILURE_MODES)}")
+    kw = dict(kw or {})
+    unknown = set(kw) - set(defaults)
+    if unknown:
+        raise ValueError(
+            f"unknown failure_kw keys for mode {mode!r}: "
+            f"{', '.join(sorted(unknown))}; known: "
+            f"{', '.join(sorted(defaults))}")
+    return {**defaults, **kw}
+
+
+def _events_from_windows(windows: list) -> list:
+    """[(start, end, machine)] downtime windows -> the sorted
+    (t, "fail"|"recover", machine) event stream.
+
+    A machine's windows that touch or overlap merge into one continuous
+    downtime first: emitting a recover that coincides with the same
+    machine's next fail would make the simulator drop the same-instant
+    fail as a duplicate notice (FAIL orders before RECOVER at equal t)
+    and silently annihilate the second window — e.g. back-to-back
+    whole-cluster maintenance passes.  Cross-machine same-instant ties
+    (a zero-gap handoff recovering batch i while failing batch i+1)
+    remain, and the simulator coalesces its scheduling reaction over
+    such bursts."""
+    by_machine: dict = {}
+    for s, e, m in windows:
+        by_machine.setdefault(m, []).append((s, e))
+    events = []
+    for m, ws in by_machine.items():
+        ws.sort()
+        cur_s, cur_e = ws[0]
+        merged = []
+        for s, e in ws[1:]:
+            if s <= cur_e:
+                cur_e = max(cur_e, e)
+            else:
+                merged.append((cur_s, cur_e))
+                cur_s, cur_e = s, e
+        merged.append((cur_s, cur_e))
+        for s, e in merged:
+            events.append((s, "fail", m))
+            events.append((e, "recover", m))
+    events.sort(key=lambda e: (e[0], e[2], e[1]))
+    return events
+
+
+def make_mtbf_failures(machine_ids: Sequence[int], seed: int = 0,
+                       **kw) -> list:
+    """Seeded stochastic failure/repair process: each machine alternates
+    exponential up-times (mean ``mtbf``) and exponential down-times (mean
+    ``mttr``) until ``horizon``; ``scope`` < 1 restricts churn to a seeded
+    subset of machines (flaky-hardware hotspots).  Same seed (and machine
+    list) -> byte-identical schedule."""
+    p = resolve_failure_kw("mtbf", kw)
+    rng = random.Random(seed + 60_000)
+    machine_ids = list(machine_ids)
+    if p["scope"] < 1.0:
+        k = max(1, int(p["scope"] * len(machine_ids)))
+        machine_ids = sorted(rng.sample(machine_ids, k))
+    windows = []
+    for m in machine_ids:
+        t = rng.expovariate(1.0 / p["mtbf"])
+        while t < p["horizon"]:
+            down = rng.expovariate(1.0 / p["mttr"])
+            windows.append((t, t + down, m))
+            t += down + rng.expovariate(1.0 / p["mtbf"])
+    return _events_from_windows(windows)
+
+
+def make_rolling_maintenance(machine_ids: Sequence[int], **kw) -> list:
+    """Deterministic rolling maintenance: machines go down in consecutive
+    batches of ``batch_size`` for ``window`` seconds each, ``gap`` seconds
+    apart, starting at ``start``; ``rounds`` full passes.  Draws nothing
+    from any rng — the schedule is a pure function of the machine list.
+    A machine whose consecutive windows touch (e.g. whole-cluster batches
+    with ``gap=0``) gets one merged continuous downtime."""
+    p = resolve_failure_kw("maintenance", kw)
+    machine_ids = list(machine_ids)
+    windows = []
+    t = p["start"]
+    for _ in range(int(p["rounds"])):
+        for i in range(0, len(machine_ids), int(p["batch_size"])):
+            for m in machine_ids[i:i + int(p["batch_size"])]:
+                windows.append((t, t + p["window"], m))
+            t += p["window"] + p["gap"]
+    return _events_from_windows(windows)
+
+
+# ---------------------------------------------------------------------------
 # CSV trace replay (Philly / Helios-style)
 # ---------------------------------------------------------------------------
 

@@ -5,6 +5,7 @@ from .runner import (  # noqa: F401
     ARTIFACT_SCHEMA,
     ARTIFACT_SCHEMA_V2,
     ARTIFACT_SCHEMA_V3,
+    ARTIFACT_SCHEMA_V4,
     artifact_json,
     run_one,
     run_one_timed,

@@ -24,6 +24,11 @@ ARTIFACT_SCHEMA_V2 = "repro.experiments.artifact/v2"
 # checkpoint-overhead knob (config.checkpoint_overhead).  Emitted only when
 # either feature is enabled: legacy cells keep their v1/v2 bytes.
 ARTIFACT_SCHEMA_V3 = "repro.experiments.artifact/v3"
+# v4 = v3 + machine failure/churn provenance (config.failure_mode /
+# failure_kw with the mode defaults resolved) and metrics
+# .n_machine_failures / .n_job_failures.  Emitted only when a scenario's
+# failure_mode is set: failure-off cells keep their v1/v2/v3 bytes.
+ARTIFACT_SCHEMA_V4 = "repro.experiments.artifact/v4"
 
 # volatile keys excluded from determinism comparisons (populated by callers,
 # never by run_one itself)
@@ -40,6 +45,7 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
             n_jobs: Optional[int] = None, max_time: Optional[float] = None,
             contention: Optional[str] = None,
             parallelism: Optional[str] = None,
+            failures: Optional[str] = None,
             comm: Optional[CommModel] = None, archs=None,
             naive_topology: bool = False) -> dict:
     """Simulate one cell and return the artifact dict.
@@ -47,7 +53,10 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
     ``n_racks`` / ``n_jobs`` / ``max_time`` override the scenario (rack-count
     sweeps, --small benchmark modes); ``contention`` switches the shared
     fabric on (``"fair-share"``) for any scenario; ``parallelism`` switches
-    hybrid DP/TP/PP/EP plan assignment on (``"auto"``); ``comm`` lets
+    hybrid DP/TP/PP/EP plan assignment on (``"auto"``); ``failures``
+    switches machine failure/maintenance churn on (``"mtbf"`` /
+    ``"maintenance"``, with the mode's default knobs unless the scenario
+    sets ``failure_kw``); ``comm`` lets
     callers inject a shared or calibrated communication model.
     ``naive_topology`` swaps in the retained linear-scan
     ``NaiveClusterTopology`` — same schedules and byte-identical artifacts,
@@ -60,13 +69,16 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
     scenario = scenario.with_overrides(n_racks=n_racks, n_jobs=n_jobs,
                                        max_time=max_time,
                                        contention_mode=contention,
-                                       parallelism=parallelism)
+                                       parallelism=parallelism,
+                                       failure_mode=failures)
     archs = archs if archs is not None else _archs()
     policy = policy or scenario.policy
     sim = scenario.build_sim(archs, policy=policy, seed=seed, comm=comm,
                              naive_topology=naive_topology)
     metrics = sim.run(max_time=scenario.max_time)
-    if scenario.parallelism or scenario.checkpoint_overhead:
+    if scenario.failure_mode:
+        schema = ARTIFACT_SCHEMA_V4
+    elif scenario.parallelism or scenario.checkpoint_overhead:
         schema = ARTIFACT_SCHEMA_V3
     elif scenario.contention_mode:
         schema = ARTIFACT_SCHEMA_V2

@@ -32,7 +32,13 @@ from repro.core import (
 )
 from repro.core.fabric import DEFAULT_SPINE_X, DEFAULT_UPLINK_X
 from repro.core.policies import make_policy
-from repro.core.trace import PARALLELISM_MODES
+from repro.core.trace import (
+    FAILURE_MODES,
+    PARALLELISM_MODES,
+    make_mtbf_failures,
+    make_rolling_maintenance,
+    resolve_failure_kw,
+)
 from repro.types import PROFILES
 
 CONTENTION_MODES = (None, "fair-share")
@@ -105,6 +111,13 @@ class Scenario:
     # hybrid-parallelism plans: None (pure DP, v1-identical) or "auto"
     # (per-job DP/TP/PP/EP plans derived from model family and demand)
     parallelism: Optional[str] = None
+    # machine failure/maintenance churn: None (machines never die, legacy-
+    # identical), "mtbf" (seeded exponential fail/repair per machine) or
+    # "maintenance" (deterministic rolling-batch downtime windows);
+    # failure_kw overrides the mode's default knobs (see
+    # repro.core.trace.MTBF_DEFAULTS / MAINTENANCE_DEFAULTS)
+    failure_mode: Optional[str] = None
+    failure_kw: Mapping[str, Any] = field(default_factory=dict)
     # defaults for the simulation
     policy: str = "dally"
     round_period: float = 300.0
@@ -119,10 +132,17 @@ class Scenario:
         An explicit n_racks override wins over heterogeneous rack_sizes —
         the result is a uniform cluster of that many racks (otherwise the
         override would be silently ignored while still being recorded in
-        the artifact's provenance)."""
+        the artifact's provenance).  A failure_mode override that SWITCHES
+        mode drops the scenario's failure_kw: the old mode's knobs (e.g.
+        mtbf/mttr under "maintenance") would otherwise be rejected as
+        unknown, aborting the documented "--failures overrides every
+        scenario" sweep on any scenario that tunes its own churn."""
         kw = {k: v for k, v in kw.items() if v is not None}
         if kw.get("n_racks") is not None and self.rack_sizes is not None:
             kw.setdefault("rack_sizes", None)
+        if (kw.get("failure_mode") is not None
+                and kw["failure_mode"] != self.failure_mode):
+            kw.setdefault("failure_kw", {})
         return dataclasses.replace(self, **kw) if kw else self
 
     def build_cluster(self, naive_topology: bool = False) -> ClusterTopology:
@@ -187,6 +207,25 @@ class Scenario:
                                       overlap_frac=self.overlap_frac,
                                       calibration=calibration)
 
+    def build_failures(self, machine_ids, seed: int):
+        """The cell's failure schedule, or None when churn is off.
+        ``machine_ids`` must be the machines that actually hold GPUs
+        (failing a ghost stride slot of a heterogeneous topology would
+        silently dilute the effective churn)."""
+        if self.failure_mode is None:
+            return None
+        if self.failure_mode not in FAILURE_MODES:
+            raise ValueError(
+                f"scenario {self.name!r}: unknown failure_mode "
+                f"{self.failure_mode!r}; known: "
+                f"{', '.join(str(m) for m in FAILURE_MODES)}")
+        kw = dict(self.failure_kw)
+        if self.failure_mode == "mtbf":
+            return make_mtbf_failures(machine_ids, seed=seed, **kw)
+        # "maintenance" draws nothing from the seed: the schedule is a
+        # pure function of the machine list (rolling windows)
+        return make_rolling_maintenance(machine_ids, **kw)
+
     def build_trace(self, archs, seed: int):
         if self.parallelism not in PARALLELISM_MODES:
             raise ValueError(
@@ -219,10 +258,12 @@ class Scenario:
                   comm: Optional[CommModel] = None,
                   naive_topology: bool = False) -> ClusterSimulator:
         cluster = self.build_cluster(naive_topology=naive_topology)
+        # machines that actually hold GPUs (pre-allocation: full capacity),
+        # excluding the empty stride slots of heterogeneous topologies
+        real = [m for m in range(cluster.n_machines)
+                if cluster.free[m] > 0]
         events = list(self.slowdown_events)
         if self.contention is not None:
-            real = [m for m in range(cluster.n_machines)
-                    if cluster.free[m] > 0]  # pre-allocation: full capacity
             events += self.contention.events(real, seed)
         comm = comm or self.build_comm(archs)
         sim = ClusterSimulator(cluster,
@@ -231,6 +272,7 @@ class Scenario:
                                round_period=self.round_period,
                                checkpoint_overhead=self.checkpoint_overhead,
                                slowdown_events=events or None,
+                               failure_events=self.build_failures(real, seed),
                                fabric=self.build_fabric(cluster, comm))
         for job in self.build_trace(archs, seed):
             sim.submit(job)
@@ -277,6 +319,13 @@ class Scenario:
             out["parallelism"] = self.parallelism
         if self.checkpoint_overhead:
             out["checkpoint_overhead"] = self.checkpoint_overhead
+        # schema-v4 keys: like the fabric capacities, the RESOLVED failure
+        # knobs are recorded (defaults merged), so the artifact pins the
+        # simulated churn even if the mode's defaults change later
+        if self.failure_mode is not None:
+            out["failure_mode"] = self.failure_mode
+            out["failure_kw"] = resolve_failure_kw(self.failure_mode,
+                                                   dict(self.failure_kw))
         return out
 
 
@@ -457,3 +506,36 @@ register(Scenario(
     "the deep-queue small-job regime at full datacenter scale",
     n_racks=128, trace="philly", n_jobs=50_000,
     trace_kw={"mean_interarrival": 5.0}))
+
+# -- failures & churn (machine fail/recover, schema v4) -----------------------
+# Hardware failures and maintenance churn are a first-order effect on real
+# GPU datacenters (Hu et al. 2021); these cells stress re-placement as
+# capacity comes and goes.  Consolidated placements intersect fewer
+# machines, so each failure kills fewer jobs — the regime fig15 measures.
+register(Scenario(
+    "failure-prone",
+    description="paper-batch under seeded MTBF/MTTR machine churn (24h "
+    "MTBF, 2h MTTR per machine: one failure somewhere every ~20 min) with "
+    "a 2-minute checkpoint-restore surcharge per lost placement",
+    failure_mode="mtbf",
+    failure_kw={"mtbf": 24 * 3600.0, "mttr": 2 * 3600.0},
+    checkpoint_overhead=120.0,
+    trace="batch", n_jobs=400))
+register(Scenario(
+    "rolling-maintenance",
+    description="deterministic rolling maintenance: half-rack batches of "
+    "4 machines down for 1h each, back to back, two full passes",
+    failure_mode="maintenance",
+    failure_kw={"start": 4 * 3600.0, "window": 3600.0, "batch_size": 4,
+                "rounds": 2},
+    trace="batch", n_jobs=400))
+register(Scenario(
+    "hotspot-flaky",
+    description="a flaky 25% of machines on a short 8h-MTBF/30min-MTTR "
+    "cycle, on a congested fair-share spine: churn and endogenous "
+    "contention compound",
+    contention_mode="fair-share", spine_bw=50e9,
+    failure_mode="mtbf",
+    failure_kw={"mtbf": 8 * 3600.0, "mttr": 1800.0, "scope": 0.25},
+    checkpoint_overhead=120.0,
+    trace="batch", n_jobs=300))

@@ -68,12 +68,14 @@ def sweep(scenarios: Sequence[str], policies: Sequence[str],
           max_time: Optional[float] = None,
           contention: Optional[str] = None,
           parallelism: Optional[str] = None,
+          failures: Optional[str] = None,
           naive_topology: bool = False) -> dict:
     """Run the full cross product and return the index dict."""
     out_dir = pathlib.Path(out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
     overrides = {"n_jobs": n_jobs, "n_racks": n_racks, "max_time": max_time,
-                 "contention": contention, "parallelism": parallelism}
+                 "contention": contention, "parallelism": parallelism,
+                 "failures": failures}
     if naive_topology:
         # implementation A/B (fig14 reference): artifacts stay identical,
         # so only the index records that the slow path was timed
@@ -132,6 +134,10 @@ def main(argv=None) -> None:
     ap.add_argument("--parallelism", default=None, choices=["auto"],
                     help="enable hybrid DP/TP/PP/EP plan assignment for "
                     "every scenario's trace (schema v3 artifacts)")
+    ap.add_argument("--failures", default=None,
+                    choices=["mtbf", "maintenance"],
+                    help="enable machine failure/maintenance churn for "
+                    "every scenario (schema v4 artifacts)")
     ap.add_argument("--naive-topology", action="store_true",
                     help="time every cell on the retained linear-scan "
                     "topology (identical artifacts, pre-indexing wall "
@@ -154,7 +160,7 @@ def main(argv=None) -> None:
         seeds, workers=args.workers, out_dir=args.out, csv=args.csv,
         n_jobs=args.n_jobs, n_racks=args.racks, max_time=args.max_time,
         contention=args.contention, parallelism=args.parallelism,
-        naive_topology=args.naive_topology)
+        failures=args.failures, naive_topology=args.naive_topology)
     for r in index["runs"]:
         print(f"{r['scenario']:>18s} {r['policy']:>22s} seed{r['seed']} "
               f"makespan={r['makespan']/3600:8.1f}h "

@@ -1,0 +1,263 @@
+"""Machine failure / churn subsystem: schedule generators, crash
+semantics, schema-v4 threading, and the fig15 acceptance claim.
+
+The per-event invariants (GPU conservation with a failed term, no
+placement on a dead machine, completion exactness) live in
+tests/test_simulator_invariants.py; the topology-level differential suite
+in tests/test_topology_index.py; the v4 golden digests in
+tests/test_golden_artifacts.py.  This module covers everything else."""
+import json
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
+                        make_mtbf_failures, make_rolling_maintenance)
+from repro.core.job import Job
+from repro.core.policies import make_policy
+from repro.core.topology import Placement
+from repro.core.trace import resolve_failure_kw
+from repro.experiments import Scenario, run_one
+from repro.experiments.sweep import sweep
+
+ARCHS_L = list(ARCHS.values())
+COMM = CommModel.from_configs(ARCHS_L)
+
+
+# -- schedule generators -----------------------------------------------------
+
+def test_mtbf_schedule_seed_determinism():
+    a = make_mtbf_failures(range(64), seed=3)
+    b = make_mtbf_failures(range(64), seed=3)
+    assert a == b
+    assert repr(a) == repr(b)  # byte-identical, not just float-equal
+    assert a != make_mtbf_failures(range(64), seed=4)
+    assert a  # the default horizon/mtbf genuinely produce churn
+
+
+def test_mtbf_every_failure_carries_its_recovery():
+    """Per machine the stream alternates fail/recover (ending recovered):
+    a machine that never came back could strand waiting jobs forever."""
+    events = make_mtbf_failures(range(16), seed=1, mtbf=6 * 3600.0,
+                                mttr=3600.0, horizon=3 * 24 * 3600.0)
+    per_machine = {}
+    for t, kind, m in events:
+        per_machine.setdefault(m, []).append((t, kind))
+    for m, evs in per_machine.items():
+        assert [k for _, k in evs] == ["fail", "recover"] * (len(evs) // 2)
+        assert all(evs[i][0] <= evs[i + 1][0] for i in range(len(evs) - 1))
+
+
+def test_mtbf_scope_restricts_churn_to_a_subset():
+    ev = make_mtbf_failures(range(100), seed=0, scope=0.25,
+                            horizon=30 * 24 * 3600.0)
+    machines = {m for _, _, m in ev}
+    assert 1 <= len(machines) <= 25
+
+
+def test_rolling_maintenance_is_deterministic_and_seed_free():
+    kw = dict(start=1800.0, window=600.0, batch_size=3)
+    a = make_rolling_maintenance(range(8), **kw)
+    assert a == make_rolling_maintenance(range(8), **kw)
+    # ceil(8/3) = 3 batches, one fail+recover pair per machine
+    assert len(a) == 16
+    assert a[0] == (1800.0, "fail", 0)
+    assert {m for _, _, m in a} == set(range(8))
+
+
+def test_touching_maintenance_windows_merge_into_one_downtime():
+    """Regression: whole-cluster back-to-back passes (gap=0) put each
+    machine's pass-N recover at the same instant as its pass-N+1 fail;
+    emitting both would make the simulator drop the fail as a duplicate
+    and annihilate the second window.  The generator merges touching
+    windows into one continuous downtime instead."""
+    ev = make_rolling_maintenance(range(8), start=3600.0, window=3600.0,
+                                  batch_size=8, rounds=2, gap=0.0)
+    assert len(ev) == 16  # one merged fail/recover pair per machine
+    per_machine = {}
+    for t, kind, m in ev:
+        per_machine.setdefault(m, []).append((t, kind))
+    for evs in per_machine.values():
+        assert evs == [(3600.0, "fail"), (3600.0 + 2 * 3600.0, "recover")]
+
+
+def test_failure_kw_typos_are_errors():
+    with pytest.raises(ValueError, match="unknown failure_kw"):
+        make_mtbf_failures(range(4), seed=0, mtfb=3600.0)
+    with pytest.raises(ValueError, match="unknown failure mode"):
+        resolve_failure_kw("nope")
+    sc = Scenario("t-bad", n_racks=1, trace="batch", n_jobs=2,
+                  failure_mode="bogus")
+    with pytest.raises(ValueError, match="unknown failure_mode"):
+        run_one(sc, policy="dally", seed=0)
+
+
+# -- crash semantics ---------------------------------------------------------
+
+def test_crash_loses_partial_iteration_and_pays_restore():
+    """A machine failure mid-iteration: whole iterations survive (the
+    per-iteration checkpoint), the in-flight partial one is lost, and the
+    restart pays restore_time + checkpoint_overhead — pinned exactly."""
+    cl = ClusterTopology(n_racks=1, machines_per_rack=2, gpus_per_machine=4)
+    it, _ = COMM.iteration_time("yi-9b", 1.0, Placement(((0, 4),)), 2, 4)
+    t_fail = 10.5 * it  # half an iteration in flight
+    sim = ClusterSimulator(
+        cl, make_policy("dally"), COMM, checkpoint_overhead=60.0,
+        failure_events=[(t_fail, "fail", 0), (t_fail + 3600.0, "recover", 0)])
+    job = Job(job_id=0, model="yi-9b", n_gpus=4, total_iters=100,
+              compute_time_per_iter=1.0)
+    sim.submit(job)
+    res = sim.run()
+    assert res["n_machine_failures"] == 1
+    assert res["n_job_failures"] == 1
+    assert job.failures == 1
+    assert job.preemptions == 0  # a crash is not a scheduling decision
+    assert res["preemptions"] == 0
+    # re-placed on the surviving machine at the crash instant: 10 whole
+    # iterations kept, 90 to go after the restore surcharge
+    expected = t_fail + sim.restore_time + 60.0 + 90 * it
+    assert job.finish_time == pytest.approx(expected)
+    assert cl.free_gpus() == cl.total_gpus and cl.failed_gpus() == 0
+
+
+def test_full_outage_defers_jobs_until_recovery():
+    """Every machine down when a job arrives: nothing wedges — the job
+    waits out the outage and places the moment capacity recovers."""
+    cl = ClusterTopology(n_racks=1, machines_per_rack=2, gpus_per_machine=4)
+    sim = ClusterSimulator(
+        cl, make_policy("gandiva"), COMM,
+        failure_events=[(0.0, "fail", 0), (0.0, "fail", 1),
+                        (7200.0, "recover", 0), (7200.0, "recover", 1)])
+    job = Job(job_id=0, model="yi-9b", n_gpus=8, total_iters=20,
+              compute_time_per_iter=0.5, arrival=10.0)
+    sim.submit(job)
+    res = sim.run()
+    assert res["n_finished"] == 1
+    assert job.t_queue >= 7200.0 - 10.0
+    assert job.failures == 0  # it never held a dead machine's GPUs
+    assert job.finish_time > 7200.0
+    # regression: dead machines are neither free nor busy — the two-hour
+    # outage must read as ~idle, not as a fully utilized cluster
+    assert res["avg_utilization"] < 0.1
+
+
+def test_progress_folds_repriced_fraction_into_whole_iterations():
+    """Regression: a re-price-carried partial iteration counts towards
+    the whole-iteration fold at eviction (0.8 carried + 0.5 elapsed =
+    1.3 -> one COMPLETED, checkpointed iteration a crash must not
+    re-do), exactly mirroring _reprice's own folding."""
+    cl = ClusterTopology(n_racks=1)
+    sim = ClusterSimulator(cl, make_policy("dally"), COMM)
+    job = Job(job_id=0, model="yi-9b", n_gpus=2, total_iters=10,
+              compute_time_per_iter=0.1)
+    job.iter_time = 1.0
+    job.run_start = 0.0
+    job.iters_frac = 0.8
+    sim._progress(job, 0.5)
+    assert job.iters_done == 1
+    assert job.iters_frac == pytest.approx(0.3)
+    assert job.t_run == 0.5
+
+
+def test_duplicate_failure_notices_are_idempotent():
+    cl = ClusterTopology(n_racks=1)
+    sim = ClusterSimulator(
+        cl, make_policy("dally"), COMM,
+        failure_events=[(100.0, "fail", 0), (200.0, "fail", 0),
+                        (300.0, "recover", 1),  # recover of a live machine
+                        (400.0, "recover", 0), (500.0, "recover", 0)])
+    job = Job(job_id=0, model="yi-9b", n_gpus=2, total_iters=10,
+              compute_time_per_iter=0.1)
+    sim.submit(job)
+    res = sim.run()
+    assert res["n_machine_failures"] == 1  # the duplicate was dropped
+    assert cl.failed_gpus() == 0
+    assert res["n_finished"] == 1
+
+
+# -- experiment-layer threading (schema v4) ----------------------------------
+
+def test_registry_covers_failure_scenarios():
+    from repro.experiments import SCENARIOS
+    for name in ("failure-prone", "rolling-maintenance", "hotspot-flaky"):
+        assert name in SCENARIOS
+        assert SCENARIOS[name].failure_mode is not None
+
+
+def test_failure_artifact_schema_v4_and_provenance():
+    art = run_one("failure-prone", policy="dally", seed=0, n_jobs=20)
+    assert art["schema"] == "repro.experiments.artifact/v4"
+    cfg = art["config"]
+    assert cfg["failure_mode"] == "mtbf"
+    # the RESOLVED knobs are recorded: overrides merged over mode defaults
+    assert cfg["failure_kw"]["mttr"] == 2 * 3600.0
+    assert cfg["failure_kw"]["horizon"] == 7 * 24 * 3600.0
+    assert art["metrics"]["n_machine_failures"] > 0
+
+
+def test_hotspot_flaky_composes_churn_with_fabric():
+    art = run_one("hotspot-flaky", policy="dally", seed=1, n_jobs=25)
+    assert art["schema"] == "repro.experiments.artifact/v4"
+    m = art["metrics"]
+    assert "n_reprices" in m and "n_machine_failures" in m
+    assert art["config"]["contention_mode"] == "fair-share"
+    assert art["config"]["failure_kw"]["scope"] == 0.25
+
+
+def test_failures_override_flips_any_scenario_to_v4():
+    on = run_one("smoke", policy="dally", seed=0, n_jobs=15,
+                 failures="maintenance")
+    off = run_one("smoke", policy="dally", seed=0, n_jobs=15)
+    assert on["schema"] == "repro.experiments.artifact/v4"
+    assert off["schema"] == "repro.experiments.artifact/v1"
+    assert "failure_mode" not in off["config"]
+    assert "n_machine_failures" not in off["metrics"]
+
+
+def test_failures_mode_switch_resets_incompatible_kw():
+    """Regression: overriding failure-prone (mtbf knobs) to maintenance
+    must apply the new mode's defaults, not reject mtbf/mttr as unknown
+    keys — the sweep documents --failures as overriding every scenario."""
+    art = run_one("failure-prone", policy="dally", seed=0, n_jobs=15,
+                  failures="maintenance")
+    assert art["config"]["failure_mode"] == "maintenance"
+    assert "mtbf" not in art["config"]["failure_kw"]
+    assert art["config"]["failure_kw"]["window"] == 3600.0
+    # same-mode override keeps the scenario's tuned knobs
+    same = run_one("failure-prone", policy="dally", seed=0, n_jobs=15,
+                   failures="mtbf")
+    assert same["config"]["failure_kw"]["mttr"] == 2 * 3600.0
+
+
+def test_sweep_failures_byte_identical_across_workers(tmp_path):
+    """Same seeds + failure schedules -> byte-identical v4 artifacts at
+    any worker count, with the override recorded in the index."""
+    kw = dict(n_jobs=12, failures="mtbf")
+    idx1 = sweep(["smoke"], ["dally"], [0, 1], workers=1,
+                 out_dir=tmp_path / "w1", **kw)
+    idx2 = sweep(["smoke"], ["dally"], [0, 1], workers=2,
+                 out_dir=tmp_path / "w2", **kw)
+    f1 = sorted(p for p in (tmp_path / "w1").iterdir() if "seed" in p.name)
+    f2 = sorted(p for p in (tmp_path / "w2").iterdir() if "seed" in p.name)
+    assert [p.name for p in f1] == [p.name for p in f2] and len(f1) == 2
+    for a, b in zip(f1, f2):
+        assert a.read_bytes() == b.read_bytes()
+    art = json.loads(f1[0].read_text())
+    assert art["schema"] == "repro.experiments.artifact/v4"
+    assert idx1["overrides"]["failures"] == "mtbf"
+    assert idx2["overrides"]["failures"] == "mtbf"
+
+
+# -- fig15 acceptance --------------------------------------------------------
+
+def test_fig15_acceptance_dally_beats_scatter_under_churn():
+    """Consolidated placements intersect fewer machines, so each failure
+    kills fewer jobs: dally's makespan must beat the scatter baseline on
+    the failure-prone cell (the fig15 headline, pinned at CI scale)."""
+    da = run_one("failure-prone", policy="dally", seed=0, n_jobs=80)
+    sc = run_one("failure-prone", policy="scatter", seed=0, n_jobs=80)
+    dm, sm = da["metrics"], sc["metrics"]
+    assert dm["n_job_failures"] > 0 and sm["n_job_failures"] > 0
+    assert dm["makespan"] < sm["makespan"]
+    # scattered placements span more machines, so churn kills more of them
+    assert dm["n_job_failures"] < sm["n_job_failures"]

@@ -16,7 +16,10 @@ import hashlib
 
 from repro.experiments import artifact_json, run_one
 
-# (scenario, policy, seed, n_jobs) -> sha256 of the canonical artifact JSON
+# (scenario, policy, seed, n_jobs) -> sha256 of the canonical artifact JSON.
+# These failure-OFF cells predate the churn subsystem and pin that it left
+# legacy schedules (and schema v1 bytes) completely untouched: they are
+# re-verified, never re-pinned, by feature PRs.
 EXPECTED = {
     ("smoke", "dally", 0, 20):
         "6990ef4b197f915f50867e3e7128a7da679649dd609dbc1412359882521dcf1f",
@@ -30,21 +33,57 @@ EXPECTED = {
         "45d85c19d322bafdc73eaf17983a191cd38ed0ec69b565edc0d84d107f94c236",
 }
 
+# machine-churn cells (schema v4): one seeded-MTBF and one deterministic
+# rolling-maintenance schedule — crash accounting, capacity masking, and
+# post-failure re-placement are all schedule-affecting, so these digests
+# pin the entire fail/recover subsystem end to end.
+EXPECTED_V4 = {
+    ("failure-prone", "dally", 0, 32):
+        "aac77aa4d6294ad0068736b5e7413e0263bcea387e44c31d803ae696241227ba",
+    ("rolling-maintenance", "gandiva", 0, 32):
+        "78ccc8ceece0729d061946906650b4a2da7015ab0fd0b69b9fe65b80722e8957",
+}
 
-def _digest(scenario, policy, seed, n_jobs):
+# shared-fabric cell (schema v2): pins the contended-cell accounting,
+# including the eviction-time fold of the re-price-carried partial
+# iteration into whole (checkpointed) iterations — introduced together
+# with the churn subsystem, since a crash must never re-do a completed
+# iteration.  Fabric-off cells were bit-identical under that change (the
+# carried fraction is always 0.0 there); contended cells shifted, and
+# this digest keeps them from drifting again.
+EXPECTED_V2 = {
+    ("congested-spine", "scatter", 0, 40):
+        "b804dd584f091c0cea9f5fd163a3faea9340ced4a6787b2358eecafbfb056120",
+}
+
+
+def _digest(scenario, policy, seed, n_jobs,
+            schema="repro.experiments.artifact/v1"):
     art = run_one(scenario, policy=policy, seed=seed, n_jobs=n_jobs)
-    assert art["schema"] == "repro.experiments.artifact/v1"
+    assert art["schema"] == schema
     return hashlib.sha256(artifact_json(art).encode()).hexdigest()
 
 
-def test_golden_artifact_digests():
-    for (scenario, policy, seed, n_jobs), want in EXPECTED.items():
-        got = _digest(scenario, policy, seed, n_jobs)
+def _check(expected, schema):
+    for (scenario, policy, seed, n_jobs), want in expected.items():
+        got = _digest(scenario, policy, seed, n_jobs, schema=schema)
         assert got == want, (
             f"run_one({scenario!r}, policy={policy!r}, seed={seed}, "
             f"n_jobs={n_jobs}) artifact changed: {got} != pinned {want}. "
-            "If the schedule change is intentional, update EXPECTED in "
+            "If the schedule change is intentional, update the pins in "
             "tests/test_golden_artifacts.py and justify it in the commit.")
+
+
+def test_golden_artifact_digests():
+    _check(EXPECTED, "repro.experiments.artifact/v1")
+
+
+def test_golden_artifact_digests_v2_contention():
+    _check(EXPECTED_V2, "repro.experiments.artifact/v2")
+
+
+def test_golden_artifact_digests_v4_failures():
+    _check(EXPECTED_V4, "repro.experiments.artifact/v4")
 
 
 def test_golden_artifacts_are_volatile_free():

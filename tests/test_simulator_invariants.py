@@ -1,7 +1,8 @@
 """Property-based simulator invariants, checked after EVERY event via the
 ``event_hook`` seam (not just at end-of-run): conservation of GPUs,
 completion exactness, monotone accounting, and seed-determinism — with and
-without the shared-fabric contention model."""
+without the shared-fabric contention model, and under arbitrary machine
+FAIL/RECOVER churn (the crash-consistency suite)."""
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCHS
@@ -27,10 +28,15 @@ class InvariantProbe:
     def __call__(self, sim, kind):
         self.events += 1
         cl = sim.cluster
-        # conservation: allocated + free == total, per machine in bounds
+        # conservation: allocated + free + failed == total (failed == 0
+        # on churn-free clusters), per machine in bounds
         allocated = sum(j.placement.n_gpus for j in sim.running)
-        assert allocated + cl.free_gpus() == cl.total_gpus
+        assert allocated + cl.free_gpus() + cl.failed_gpus() \
+            == cl.total_gpus
         assert all(0 <= f <= cl.gpus_per_machine for f in cl.free)
+        # no placement ever intersects a dead machine
+        for j in sim.running:
+            assert not any(cl.is_failed(m) for m, _ in j.placement.alloc)
         # no job finishes partially
         for j in sim.finished:
             assert j.iters_done == j.total_iters
@@ -47,12 +53,14 @@ class InvariantProbe:
         assert states + sim._pending_arrivals == len(sim.jobs)
 
 
-def _run_probed(policy, seed, racks, contended, trace="batch", n_jobs=25):
+def _run_probed(policy, seed, racks, contended, trace="batch", n_jobs=25,
+                failure_events=None):
     mk = make_batch_trace if trace == "batch" else make_poisson_trace
     cl = ClusterTopology(n_racks=racks, spine_bw=NIC if contended else None)
     fab = FairShareFabric(cl, nic_bw=NIC) if contended else None
     probe = InvariantProbe()
     sim = ClusterSimulator(cl, make_policy(policy), COMM, fabric=fab,
+                           failure_events=failure_events,
                            event_hook=probe)
     for j in mk(ARCHS_L, n_jobs=n_jobs, seed=seed):
         sim.submit(j)
@@ -98,6 +106,81 @@ def test_run_one_deterministic_with_contention():
     b = run_one("oversubscribed-uplinks", policy="tiresias", seed=7,
                 n_jobs=30)
     assert a == b
+
+
+# -- crash consistency: machine FAIL/RECOVER churn ---------------------------
+# The InvariantProbe above already asserts, after EVERY event, the
+# churn-aware conservation law (free + allocated + failed == total), that
+# no placement intersects a dead machine, completion exactness, and that
+# no eviction loses recorded work — these tests drive it through
+# arbitrary FAIL/RECOVER interleavings.
+
+def _churn_schedule(raw, n_machines):
+    """Hypothesis-drawn churn -> a (t, "fail"|"recover", machine) stream.
+    Deliberately NOT sanitized beyond machine-id wrapping: overlapping
+    fail/fail and recover-without-fail interleavings must be safe (the
+    simulator drops duplicate notices idempotently).  A fixed early
+    failure is always included so every example genuinely exercises the
+    crash path."""
+    events = [(1800.0, "fail", 0), (5400.0, "recover", 0)]
+    for t, m, down in raw:
+        events.append((t, "fail", m % n_machines))
+        events.append((t + down, "recover", m % n_machines))
+    events.sort(key=lambda e: (e[0], e[2], e[1]))
+    return events
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000),
+       policy=st.sampled_from(["dally", "gandiva", "tiresias", "scatter"]),
+       contended=st.booleans(),
+       raw=st.lists(st.tuples(st.floats(0.0, 4e5),
+                              st.integers(0, 1 << 30),
+                              st.floats(0.0, 4e4)),
+                    min_size=0, max_size=20))
+def test_crash_consistency_under_arbitrary_churn(seed, policy, contended,
+                                                 raw):
+    events = _churn_schedule(raw, n_machines=2 * 8)
+    sim, res = _run_probed(policy, seed, racks=2, contended=contended,
+                           failure_events=events)
+    assert sim.n_machine_failures >= 1  # the fixed failure always lands
+    # every machine recovers (each fail carries its recovery), so every
+    # job still completes exactly and nothing stays masked
+    assert res["n_finished"] == 25
+    assert res["n_job_failures"] == sum(j.failures
+                                        for j in sim.finished)
+    assert sim.cluster.failed_gpus() == 0
+    assert sim.cluster.free_gpus() == sim.cluster.total_gpus
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 50), contended=st.booleans())
+def test_same_seed_same_results_with_failures(seed, contended):
+    """Seed-determinism survives the churn subsystem: identical schedule
+    + identical workload -> identical results dict, fabric on or off."""
+    from repro.core import make_mtbf_failures
+    fe = make_mtbf_failures(range(16), seed=seed, mtbf=12 * 3600.0,
+                            mttr=3600.0, horizon=4 * 24 * 3600.0)
+    _, a = _run_probed("dally", seed, racks=2, contended=contended,
+                       failure_events=list(fe))
+    _, b = _run_probed("dally", seed, racks=2, contended=contended,
+                       failure_events=list(fe))
+    assert a == b
+
+
+def test_maintenance_churn_preemption_pressure():
+    """Rolling maintenance over a single congested rack: capacity shrinks
+    under a full wait queue (the preemption/upgrade scans must handle the
+    masked machines), and everything still completes exactly."""
+    from repro.core import make_rolling_maintenance
+    fe = make_rolling_maintenance(range(8), start=1800.0, window=3600.0,
+                                  batch_size=2, rounds=2)
+    sim, res = _run_probed("dally", 3, racks=1, contended=False, n_jobs=40,
+                           failure_events=fe)
+    assert sim.n_machine_failures == 8 * 2
+    assert res["n_finished"] == 40
+    for j in sim.finished:
+        assert j.iters_done == j.total_iters
 
 
 # -- per-pattern fabric link-usage invariants (hybrid-parallelism plans) -----

@@ -5,7 +5,8 @@ The O(1) capacity indices (per-rack free counters, machine/rack free-level
 bucket counts, whole-free counters, lazy max hints) must be observationally
 IDENTICAL to re-scanning ``free`` — same placements machine-for-machine,
 same query answers, after any interleaving of allocate / release / retake /
-external free-list pokes.  ``NaiveClusterTopology`` keeps the original
+fail / recover / external free-list pokes.  ``NaiveClusterTopology`` keeps
+the original
 method bodies, so hypothesis driving both through random op sequences is a
 direct check of the refactor, and the artifact-digest test pins the same
 property end-to-end through the simulator."""
@@ -32,6 +33,8 @@ def _pair(shape):
 def _assert_same_state(fast, naive):
     assert list(fast.free) == list(naive.free)
     assert fast.free_gpus() == naive.free_gpus()
+    assert fast.failed_machines() == naive.failed_machines()
+    assert fast.failed_gpus() == naive.failed_gpus()
     assert fast.max_free_on_machine() == naive.max_free_on_machine()
     assert fast.max_free_on_rack() == naive.max_free_on_rack()
     for r in range(fast.n_racks):
@@ -58,6 +61,10 @@ def _assert_index_consistent(cl):
     assert cl.max_free_on_machine() == max(free)
     assert cl.max_free_on_rack() == max(cl.rack_free(r)
                                         for r in range(cl.n_racks))
+    assert cl.failed_gpus() == sum(cl.machine_capacity(m)
+                                   for m in cl.failed_machines())
+    # a dead machine's free count is pinned at 0 while it is down
+    assert all(free[m] == 0 for m in cl.failed_machines())
 
 
 @settings(max_examples=120, deadline=None)
@@ -71,6 +78,13 @@ def _assert_index_consistent(cl):
                # the simulator's upgrade-probe pattern: release a running
                # placement, query, retake it unchanged
                st.tuples(st.just("probe"), st.integers(0, 1 << 30),
+                         st.just(None)),
+               # machine churn: fail a fully-free machine / recover a
+               # failed one (the simulator kills intersecting placements
+               # before failing, so fully-free is the real precondition)
+               st.tuples(st.just("fail"), st.integers(0, 1 << 30),
+                         st.just(None)),
+               st.tuples(st.just("recover"), st.integers(0, 1 << 30),
                          st.just(None))),
            min_size=1, max_size=60))
 def test_differential_random_ops(shape, ops):
@@ -94,13 +108,29 @@ def test_differential_random_ops(shape, ops):
             _assert_same_state(fast, naive)
             fast.retake(p)
             naive.retake(p)
+        elif op == "fail":
+            m = arg % fast.n_machines
+            if (not fast.is_failed(m)
+                    and fast.free[m] == fast.machine_capacity(m)):
+                fast.fail_machine(m)
+                naive.fail_machine(m)
+        elif op == "recover":
+            failed = fast.failed_machines()
+            if failed:
+                m = failed[arg % len(failed)]
+                fast.recover_machine(m)
+                naive.recover_machine(m)
         _assert_same_state(fast, naive)
         _assert_index_consistent(fast)
+    for m in fast.failed_machines():
+        fast.recover_machine(m)
+        naive.recover_machine(m)
     for p in held:
         fast.release(p)
         naive.release(p)
     _assert_same_state(fast, naive)
     assert fast.free_gpus() == fast.total_gpus
+    assert fast.failed_gpus() == 0
 
 
 def test_external_free_pokes_update_indices():
@@ -143,11 +173,47 @@ def test_max_hint_walks_down_after_bulk_allocation():
     assert cl.max_free_on_machine() == cl.gpus_per_machine
 
 
+def test_fail_recover_masks_and_restores_capacity():
+    cl = ClusterTopology(n_racks=2, machines_per_rack=2, gpus_per_machine=4)
+    cl.fail_machine(1)
+    assert cl.is_failed(1)
+    assert cl.failed_gpus() == 4 and cl.free_gpus() == 12
+    assert cl.rack_free(0) == 4 and cl.n_whole_free_machines() == 3
+    # allocations can never land on the dead machine
+    p = cl.allocate(8, "rack")
+    assert p is not None and all(m != 1 for m in p.machines())
+    assert cl.best_feasible_level(4) == "machine"
+    cl.release(p)
+    cl.recover_machine(1)
+    assert not cl.is_failed(1) and cl.failed_gpus() == 0
+    assert cl.free_gpus() == cl.total_gpus
+    _assert_index_consistent(cl)
+
+
+def test_fail_machine_requires_fully_free():
+    cl = ClusterTopology(n_racks=1)
+    p = cl.allocate(3, "machine")
+    with pytest.raises(AssertionError, match="live placements"):
+        cl.fail_machine(p.machines()[0])
+    cl.release(p)
+    cl.fail_machine(0)
+    with pytest.raises(AssertionError, match="already failed"):
+        cl.fail_machine(0)
+    with pytest.raises(AssertionError, match="failed machine"):
+        cl.free[0] = 5  # external pokes must not resurrect a dead machine
+    cl.recover_machine(0)
+    with pytest.raises(AssertionError, match="not failed"):
+        cl.recover_machine(0)
+
+
 @pytest.mark.parametrize("scenario,policy,n_jobs", [
     ("smoke", "dally", 30),
     ("hetero-racks", "tiresias", 24),
     ("congested-spine", "scatter", 40),
     ("dc-256", "dally", 120),
+    # whole-cell differential under machine churn: every fail/recover
+    # masking decision must be invisible in the artifact bytes too
+    ("failure-prone", "dally", 40),
 ])
 def test_naive_and_indexed_artifacts_byte_identical(scenario, policy, n_jobs):
     """End-to-end differential: the topology implementation must be
