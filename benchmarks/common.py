@@ -17,7 +17,11 @@ if _SRC not in sys.path:  # allow `python -m benchmarks.run` without install
 
 from repro.configs import ARCHS  # noqa: E402
 from repro.core import CommModel  # noqa: E402
-from repro.experiments import get_scenario, run_one_timed  # noqa: E402
+from repro.experiments import (  # noqa: E402
+    SimOverrides,
+    get_scenario,
+    run_one_timed,
+)
 
 SCHEDULERS = ["gandiva", "tiresias", "dally-manual", "dally-nowait",
               "dally-fullyconsolidated", "dally"]
@@ -58,7 +62,9 @@ def run_sim(policy: str, n_racks: int, *, trace="batch", n_jobs=None,
     if comm is None and key in _SIM_CACHE:
         return _SIM_CACHE[key]
     art = run_one_timed(get_scenario(TRACE_SCENARIO[trace]), policy=policy,
-                        seed=seed, n_racks=n_racks, n_jobs=n_jobs, comm=comm)
+                        seed=seed,
+                        overrides=SimOverrides(n_racks=n_racks,
+                                               n_jobs=n_jobs, comm=comm))
     res = art["metrics"]
     res["wall_s"] = art["wall_s"]
     if comm is None:

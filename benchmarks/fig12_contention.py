@@ -10,7 +10,7 @@ congested networking conditions" claim.
 """
 from __future__ import annotations
 
-from .common import row, run_one_timed, save
+from .common import SimOverrides, row, run_one_timed, save
 
 POLICIES = ["scatter", "gandiva", "tiresias", "dally-nowait", "dally"]
 SCENARIO = "congested-spine"
@@ -24,7 +24,7 @@ def main(small=False):
         out[label] = {}
         for pol in POLICIES:
             m = run_one_timed(scenario, policy=pol, seed=0,
-                              n_jobs=n_jobs)["metrics"]
+                              overrides=SimOverrides(n_jobs=n_jobs))["metrics"]
             out[label][pol] = {"total_comm_hours": m["total_comm_time"] / 3600,
                                "makespan_hours": m["makespan"] / 3600,
                                "n_reprices": m.get("n_reprices", 0)}

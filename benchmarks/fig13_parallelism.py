@@ -14,7 +14,7 @@ as single-seed secondary rows.
 """
 from __future__ import annotations
 
-from .common import row, run_one_timed, save
+from .common import SimOverrides, row, run_one_timed, save
 
 POLICIES = ["scatter", "dally-blind", "dally"]
 SCENARIO = "moe-heavy"
@@ -24,7 +24,7 @@ SECONDARY = ["pipeline-tolerant", "mixed-parallelism"]
 
 def _cell(scenario, pol, seed, n_jobs):
     m = run_one_timed(scenario, policy=pol, seed=seed,
-                      n_jobs=n_jobs)["metrics"]
+                      overrides=SimOverrides(n_jobs=n_jobs))["metrics"]
     return {
         "total_comm_hours": m["total_comm_time"] / 3600,
         "makespan_hours": m["makespan"] / 3600,

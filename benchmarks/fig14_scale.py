@@ -24,7 +24,7 @@ Writes benchmarks/artifacts/fig14_scale.json; `perf_gate.py` times the
 """
 from __future__ import annotations
 
-from .common import row, run_one_timed, save
+from .common import SimOverrides, row, run_one_timed, save
 
 SEED = 0
 POLICY = "dally"
@@ -47,8 +47,9 @@ SMALL_SPEEDUP = ("dc-256", None, 400)
 
 def _cell(scenario, n_racks, n_jobs, naive=False, policy=POLICY):
     art = run_one_timed(scenario, policy=policy, seed=SEED,
-                        n_racks=n_racks, n_jobs=n_jobs,
-                        naive_topology=naive)
+                        overrides=SimOverrides(n_racks=n_racks,
+                                               n_jobs=n_jobs,
+                                               naive_topology=naive))
     cfg = art["config"]
     return {
         "scenario": art["scenario"],

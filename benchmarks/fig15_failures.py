@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from .common import row, run_one_timed, save
+from .common import SimOverrides, row, run_one_timed, save
 
 POLICIES = ["scatter", "gandiva", "tiresias", "dally"]
 SCENARIO = "failure-prone"
@@ -50,7 +50,8 @@ def _cells(base, mtbf_h, n_jobs):
                               "mtbf": mtbf_h * 3600.0})
     out = {}
     for pol in POLICIES:
-        m = run_one_timed(sc, policy=pol, seed=SEED, n_jobs=n_jobs)["metrics"]
+        m = run_one_timed(sc, policy=pol, seed=SEED,
+                          overrides=SimOverrides(n_jobs=n_jobs))["metrics"]
         out[pol] = {
             "makespan_hours": m["makespan"] / 3600,
             "total_comm_hours": m["total_comm_time"] / 3600,

@@ -85,14 +85,15 @@ def _time_failures_small() -> float:
     # all hot here; guards the churn subsystem's wall-clock
     import dataclasses
 
-    from repro.experiments import get_scenario, run_one
+    from repro.experiments import SimOverrides, get_scenario, run_one
     sc = dataclasses.replace(
         get_scenario("failure-prone"),
         failure_kw={**dict(get_scenario("failure-prone").failure_kw),
                     "mtbf": 6 * 3600.0, "mttr": 1800.0})
+    ov = SimOverrides(n_jobs=400)
     t0 = time.perf_counter()
-    run_one(sc, policy="dally", seed=0, n_jobs=400)
-    run_one(sc, policy="scatter", seed=0, n_jobs=400)
+    run_one(sc, policy="dally", seed=0, overrides=ov)
+    run_one(sc, policy="scatter", seed=0, overrides=ov)
     return time.perf_counter() - t0
 
 

@@ -1,0 +1,43 @@
+"""The supported public surface of the scheduling reproduction.
+
+Import from here instead of deep internal paths — everything in
+``__all__`` is covered by the golden-artifact and shim-equivalence
+regression suites, while internal module layout may shift between PRs::
+
+    from repro.api import SimOverrides, run_one
+
+    art = run_one("congested-spine", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=40))
+
+    from repro.api import SchedulerService
+    svc = SchedulerService("runs/svc", scenario="smoke",
+                           overrides=SimOverrides(contention="fair-share"))
+    svc.submit({"name": "my-run", "model": "yi-9b", "n_gpus": 8,
+                "gpu_hours": 2.0})
+    svc.serve(exit_when_idle=True)
+"""
+from repro.core.policies import POLICIES, make_policy
+from repro.core.simulator import ClusterSimulator
+from repro.experiments.runner import (
+    SimOverrides,
+    artifact_json,
+    run_one,
+    run_one_timed,
+)
+from repro.experiments.scenario import (
+    SCENARIOS,
+    Scenario,
+    get_scenario,
+    register,
+)
+from repro.service import JobSpec, SchedulerService
+
+__all__ = [
+    # experiment cells
+    "Scenario", "SCENARIOS", "get_scenario", "register",
+    "SimOverrides", "run_one", "run_one_timed", "artifact_json",
+    # policies
+    "POLICIES", "make_policy",
+    # the simulator and the online service around it
+    "ClusterSimulator", "SchedulerService", "JobSpec",
+]

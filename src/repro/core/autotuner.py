@@ -117,3 +117,27 @@ class AutoTuner:
         """Returns (T_machine, T_rack) = mean + 2*stddev per tier."""
         return (self.get_tuned_timer("machine", g, now),
                 self.get_tuned_timer("rack", g, now))
+
+    def peek_timer(self, tier: str, g: int, now: float) -> float:
+        """Read-only twin of :meth:`get_tuned_timer`: same value, ZERO
+        mutation — no defaultdict bucket creation, no pruning, no cache
+        writes.  The service's live cluster-state query goes through this:
+        ``get_tuned_timer`` is schedule-affecting even as a "read" (a new
+        ``self.lists`` bucket changes the dict's insertion order, which
+        changes the float-summation order inside ``_tier_aggregate``), so
+        observing a running daemon must never call it."""
+        dq = self.lists.get((tier, g))
+        if dq:
+            fresh = [w for t, w in dq
+                     if now - t <= self.history_time_limit]
+            if fresh:
+                return self._mean_plus_2std(fresh)
+        xs: list = []
+        for (t2, _), bucket in self.lists.items():
+            if t2 != tier:
+                continue
+            xs.extend(w for t, w in bucket
+                      if now - t <= self.history_time_limit)
+        if xs:
+            return self._mean_plus_2std(xs)
+        return self.default[tier]

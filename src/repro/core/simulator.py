@@ -27,10 +27,34 @@ each other down: whenever the set of cross-rack placements changes
 iteration time is re-priced at its new fair-share bandwidth — in-flight
 progress at the old rate is folded in, and the job's COMPLETE event is
 re-pushed through the existing versioning mechanism.
+
+Service mode (incremental arrivals)
+-----------------------------------
+``run()`` is the closed-world batch entry: every job is submitted up
+front and the loop drains the event heap.  A long-lived scheduler
+(``repro.service``) instead drives the same event loop incrementally:
+``begin()`` arms the periodic-round chain once, ``submit()`` keeps
+accepting jobs at any point (their ARRIVAL events must not lie in the
+simulated past), and ``step_events()`` / ``advance_to()`` process the
+heap in bounded chunks.  State after processing a given prefix of the
+event sequence is *chunk-invariant* — events pop in a total order
+``(t, kind, seq)`` that does not depend on how the processing was
+batched — which is what makes the service's crash recovery a
+byte-identity claim rather than a best-effort one.
+
+``snapshot_bytes()`` / ``restore()`` capture and revive the complete
+simulator state (pure-Python containers, exact floats) minus the
+process-local hooks; a restored simulator continues bit-for-bit
+identically to one that never stopped.  ``op_hook``, when set, receives
+every externally-visible scheduling operation (placement, preemption,
+crash, completion, machine fail/recover, rejection) — the write-ahead
+journal seam, generalizing the per-event ``event_hook`` used by the
+invariant test-suite.
 """
 from __future__ import annotations
 
 import heapq
+import pickle
 from bisect import insort
 from operator import attrgetter
 from typing import Callable, Dict, List, Optional
@@ -72,6 +96,13 @@ class ClusterSimulator:
         # a debugging/testing seam (the invariant test-suite's probe); it
         # must not mutate the simulation
         self.event_hook = event_hook
+        # op_hook(op, now, payload) observes every externally-visible
+        # scheduling operation ("place" / "preempt" / "crash" /
+        # "complete" / "machine_fail" / "machine_recover" / "reject") —
+        # the service journal seam.  Like event_hook it must not mutate
+        # the simulation; None (the default) costs nothing.
+        self.op_hook: Optional[Callable] = None
+        self._began = False  # begin() called (service-mode round chain)
         self._fabric_dirty = False
         self.n_reprices = 0
 
@@ -128,12 +159,25 @@ class ClusterSimulator:
         self._seq += 1
         heapq.heappush(self.events, (t, kind, self._seq, payload))
 
+    def _op(self, op: str, now: float, **payload):
+        if self.op_hook is not None:
+            self.op_hook(op, now, payload)
+
     def submit(self, job: Job):
         assert job.job_id not in self.jobs, f"duplicate job_id {job.job_id}"
+        # incremental (service-mode) submissions must not land in the
+        # simulated past: the clock only moves forward, and an ARRIVAL
+        # behind it would pop immediately with a time below every event
+        # already processed.  Batch submissions always satisfy this
+        # (clock == 0.0 until run() starts).
+        assert job.arrival >= self.clock or not self._began, \
+            f"job {job.job_id} arrival {job.arrival} < clock {self.clock}"
         if job.n_gpus > self.cluster.total_gpus:
             # can never be placed: admitting it would wedge the round loop
             # forever (every offer rejected, queue never drains)
             self.rejected.append(job)
+            self._op("reject", self.clock, job_id=job.job_id,
+                     n_gpus=job.n_gpus)
             return
         self.jobs[job.job_id] = job
         if job.plan is not None:
@@ -213,6 +257,9 @@ class ClusterSimulator:
         v = self._completion_version.get(job.job_id, 0) + 1
         self._completion_version[job.job_id] = v
         self._push(t_end, COMPLETE, (job.job_id, v))
+        self._op("place", now, job_id=job.job_id, tier=tier,
+                 machines=[m for m, _ in placement.alloc],
+                 restarted=job.preemptions + job.failures > 0)
 
     def _progress(self, job: Job, now: float):
         """Account the progress of a running job up to `now`.
@@ -264,6 +311,7 @@ class ClusterSimulator:
     def preempt(self, job: Job, now: float):
         self._evict(job, now)
         job.preemptions += 1
+        self._op("preempt", now, job_id=job.job_id)
 
     def _crash(self, job: Job, now: float):
         """The job's placement intersects a machine that just died.  Same
@@ -281,6 +329,7 @@ class ClusterSimulator:
         self._evict(job, now)
         job.failures += 1
         self.n_job_failures += 1
+        self._op("crash", now, job_id=job.job_id)
 
     def migrate(self, job: Job, level: str, now: float):
         """Migration = preempt + immediate restart at the given level."""
@@ -464,106 +513,188 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------------
     def run(self, max_time: float = float("inf")) -> Dict:
-        self._push(0.0, ROUND, None)
+        """Closed-world batch run: drain the event heap (or stop at the
+        ``max_time`` horizon, folding in-flight progress) and summarize."""
+        self.begin()
         while self.events:
-            t, kind, _, payload = heapq.heappop(self.events)
-            if t > max_time:
+            if self.events[0][0] > max_time:
                 # truncated run: account in-flight jobs' progress up to the
                 # horizon, else their t_run/comm_time are silently dropped
                 # from results()
-                self.clock = max(self.clock, min(max_time, t))
+                self.clock = max(self.clock, min(max_time, self.events[0][0]))
                 for job in self.running:
                     self._progress(job, self.clock)
                 break
-            self.clock = t
-            if kind == ARRIVAL:
-                job = self.jobs[payload]
-                job.wait_since = t
-                self._pending_arrivals -= 1
-                self._enqueue(job, t)
-                self._scheduling_round(t)
-            elif kind == ROUND:
-                # running jobs alone are enough to owe a round: the
-                # policy's per-round consolidation upgrades and rack
-                # yields (§VI-3) must not stall on a quiet cluster until
-                # the next arrival or completion
-                if self.waiting or self.running:
-                    self._scheduling_round(t)
-                # busy = total - free - failed: a dead machine's masked
-                # GPUs are neither free nor doing work, so counting them
-                # busy would inflate utilization for every churn cell
-                # (failed == 0 on churn-free clusters: bytes unchanged)
-                self.timeline.record(
-                    t, self.cluster.total_gpus - self.cluster.free_gpus()
-                    - self.cluster.failed_gpus(),
-                    self.cluster.total_gpus,
-                    len(self.waiting) + len(self.running))
-                # re-arm only while work exists or is still due: pending
-                # SLOWDOWN events alone (e.g. a long contention schedule)
-                # must not keep the clock — and the idle-sample timeline —
-                # running after the last job finished
-                if self.waiting or self.running or self._pending_arrivals:
-                    self._push(t + self.round_period, ROUND, None)
-            elif kind == COMPLETE:
-                job_id, version = payload
-                if self._completion_version.get(job_id) != version:
-                    continue  # stale (job was preempted since)
-                job = self.jobs[job_id]
-                self._progress(job, t)
-                job.iters_done = job.total_iters
-                job.finish_time = t
-                self._touch_fabric(job.placement)
-                self._untrack(job)
-                self.cluster.release(job.placement)
-                if job.placement_tier != "machine":
-                    self.running_scattered.remove(job)
-                job.placement = None
-                job.placement_tier = None
-                self.running.remove(job)
-                self.finished.append(job)
-                self._scheduling_round(t)
-            elif kind == SLOWDOWN:
-                machine, factor = payload
-                self.machine_slowdown[machine] = factor
-            elif kind == FAIL:
-                # idempotent: a duplicate failure notice for an already-
-                # dead machine is dropped (arbitrary schedule interleavings
-                # — overlapping maintenance + hardware faults — stay safe)
-                if not self.cluster.is_failed(payload):
-                    self.n_machine_failures += 1
-                    victims = list(
-                        self._jobs_on_machine.get(payload, {}).values())
-                    for job in victims:
-                        self._crash(job, t)
-                    self.cluster.fail_machine(payload)
-                    self._churn_dirty = True
-            elif kind == RECOVER:
-                if self.cluster.is_failed(payload):
-                    self.cluster.recover_machine(payload)
-                    self._churn_dirty = True
-            if self._churn_dirty and not (
-                    self.events and self.events[0][0] == t
-                    and self.events[0][1] in (FAIL, RECOVER)):
-                # capacity changed: victims re-place (elsewhere) right
-                # away if anything fits, waiting jobs and consolidation
-                # upgrades claim fresh capacity, and the shrunk cluster
-                # may demand preemptions — without stalling until the
-                # next round tick.  The round runs ONCE per same-instant
-                # churn burst (after its last event): a zero-gap
-                # maintenance handoff recovers one batch and fails the
-                # next at the identical timestamp, and reacting mid-burst
-                # would schedule against the transiently doubled outage.
-                self._churn_dirty = False
-                if self.waiting or self.running:
-                    self._scheduling_round(t)
-            if self._fabric_dirty:
-                self._fabric_dirty = False
-                self._reprice(t)
-            if self.event_hook is not None:
-                self.event_hook(self, kind)
-            if not self.events and (self.waiting or self.running):
-                self._push(self.clock + self.round_period, ROUND, None)
+            self._step()
         return self.results()
+
+    def begin(self) -> None:
+        """Arm the periodic-round chain (idempotent).  ``run()`` calls it;
+        a service loop calls it once and then drives ``step_events()`` /
+        ``advance_to()`` with ``submit()`` interleaved."""
+        if not self._began:
+            self._began = True
+            self._push(self.clock, ROUND, None)
+
+    def step_events(self, n: int) -> int:
+        """Process up to ``n`` events; returns how many were processed.
+        The resulting state depends only on the *prefix* of the event
+        sequence processed so far, never on the chunking."""
+        done = 0
+        while done < n and self.events:
+            self._step()
+            done += 1
+        return done
+
+    def advance_to(self, t: float) -> int:
+        """Process every event with timestamp strictly BEFORE ``t``, then
+        move the clock to ``t`` (so a service can clamp incoming arrivals
+        against a monotone notion of "now" even across quiet stretches).
+        Events AT ``t`` stay pending deliberately: a submission arriving
+        exactly at ``t`` must still order against them by event *kind* in
+        the heap — processing them here would let a same-time ROUND jump
+        ahead of the ARRIVAL, which batch mode orders the other way.
+        Returns the number of events processed."""
+        done = 0
+        while self.events and self.events[0][0] < t:
+            self._step()
+            done += 1
+        self.clock = max(self.clock, t)
+        return done
+
+    @property
+    def idle(self) -> bool:
+        """True when nothing is left to simulate: no queued events (the
+        round chain dies when no work remains) and no live jobs."""
+        return not self.events and not self.waiting and not self.running \
+            and not self._pending_arrivals
+
+    def _step(self):
+        """Pop and process exactly one event (the body of the batch loop,
+        shared verbatim by the incremental service entries)."""
+        t, kind, _, payload = heapq.heappop(self.events)
+        self.clock = t
+        if kind == ARRIVAL:
+            job = self.jobs[payload]
+            job.wait_since = t
+            self._pending_arrivals -= 1
+            self._enqueue(job, t)
+            self._scheduling_round(t)
+        elif kind == ROUND:
+            # running jobs alone are enough to owe a round: the
+            # policy's per-round consolidation upgrades and rack
+            # yields (§VI-3) must not stall on a quiet cluster until
+            # the next arrival or completion
+            if self.waiting or self.running:
+                self._scheduling_round(t)
+            # busy = total - free - failed: a dead machine's masked
+            # GPUs are neither free nor doing work, so counting them
+            # busy would inflate utilization for every churn cell
+            # (failed == 0 on churn-free clusters: bytes unchanged)
+            self.timeline.record(
+                t, self.cluster.total_gpus - self.cluster.free_gpus()
+                - self.cluster.failed_gpus(),
+                self.cluster.total_gpus,
+                len(self.waiting) + len(self.running))
+            # re-arm only while work exists or is still due: pending
+            # SLOWDOWN events alone (e.g. a long contention schedule)
+            # must not keep the clock — and the idle-sample timeline —
+            # running after the last job finished
+            if self.waiting or self.running or self._pending_arrivals:
+                self._push(t + self.round_period, ROUND, None)
+        elif kind == COMPLETE:
+            job_id, version = payload
+            if self._completion_version.get(job_id) != version:
+                # stale (job was preempted since): drop it without firing
+                # the event_hook or the empty-heap round re-arm — exactly
+                # the `continue` of the original batch loop
+                return
+            job = self.jobs[job_id]
+            self._progress(job, t)
+            job.iters_done = job.total_iters
+            job.finish_time = t
+            self._touch_fabric(job.placement)
+            self._untrack(job)
+            self.cluster.release(job.placement)
+            if job.placement_tier != "machine":
+                self.running_scattered.remove(job)
+            job.placement = None
+            job.placement_tier = None
+            self.running.remove(job)
+            self.finished.append(job)
+            self._op("complete", t, job_id=job.job_id,
+                     jct=t - job.arrival)
+            self._scheduling_round(t)
+        elif kind == SLOWDOWN:
+            machine, factor = payload
+            self.machine_slowdown[machine] = factor
+        elif kind == FAIL:
+            # idempotent: a duplicate failure notice for an already-
+            # dead machine is dropped (arbitrary schedule interleavings
+            # — overlapping maintenance + hardware faults — stay safe)
+            if not self.cluster.is_failed(payload):
+                self.n_machine_failures += 1
+                victims = list(
+                    self._jobs_on_machine.get(payload, {}).values())
+                self._op("machine_fail", t, machine=payload,
+                         n_victims=len(victims))
+                for job in victims:
+                    self._crash(job, t)
+                self.cluster.fail_machine(payload)
+                self._churn_dirty = True
+        elif kind == RECOVER:
+            if self.cluster.is_failed(payload):
+                self.cluster.recover_machine(payload)
+                self._op("machine_recover", t, machine=payload)
+                self._churn_dirty = True
+        if self._churn_dirty and not (
+                self.events and self.events[0][0] == t
+                and self.events[0][1] in (FAIL, RECOVER)):
+            # capacity changed: victims re-place (elsewhere) right
+            # away if anything fits, waiting jobs and consolidation
+            # upgrades claim fresh capacity, and the shrunk cluster
+            # may demand preemptions — without stalling until the
+            # next round tick.  The round runs ONCE per same-instant
+            # churn burst (after its last event): a zero-gap
+            # maintenance handoff recovers one batch and fails the
+            # next at the identical timestamp, and reacting mid-burst
+            # would schedule against the transiently doubled outage.
+            self._churn_dirty = False
+            if self.waiting or self.running:
+                self._scheduling_round(t)
+        if self._fabric_dirty:
+            self._fabric_dirty = False
+            self._reprice(t)
+        if self.event_hook is not None:
+            self.event_hook(self, kind)
+        if not self.events and (self.waiting or self.running):
+            self._push(self.clock + self.round_period, ROUND, None)
+
+    # ------------------------------------------------------------------
+    def snapshot_bytes(self) -> bytes:
+        """Serialize the complete simulator state (exact floats, preserved
+        container orders — a restored simulator continues bit-for-bit).
+        The process-local hooks are excluded: a journal/probe closure
+        belongs to the process, not the state."""
+        event_hook, op_hook = self.event_hook, self.op_hook
+        self.event_hook = self.op_hook = None
+        try:
+            # fixed protocol: snapshot bytes must not depend on the Python
+            # version's default (they are digest-checked on recovery)
+            return pickle.dumps(self, protocol=4)
+        finally:
+            self.event_hook, self.op_hook = event_hook, op_hook
+
+    @classmethod
+    def restore(cls, data: bytes, *, event_hook: Optional[Callable] = None,
+                op_hook: Optional[Callable] = None) -> "ClusterSimulator":
+        """Revive a simulator from ``snapshot_bytes()`` output and re-attach
+        the (process-local) hooks."""
+        sim = pickle.loads(data)
+        assert isinstance(sim, ClusterSimulator), type(sim)
+        sim.event_hook = event_hook
+        sim.op_hook = op_hook
+        return sim
 
     # ------------------------------------------------------------------
     def results(self) -> Dict:

@@ -6,6 +6,7 @@ from .runner import (  # noqa: F401
     ARTIFACT_SCHEMA_V2,
     ARTIFACT_SCHEMA_V3,
     ARTIFACT_SCHEMA_V4,
+    SimOverrides,
     artifact_json,
     run_one,
     run_one_timed,

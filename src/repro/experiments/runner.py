@@ -6,9 +6,12 @@ identical runs produce byte-identical files regardless of worker count.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
-from typing import Optional, Union
+import warnings
+from dataclasses import dataclass
+from typing import Any, Mapping, Optional, Sequence, Union
 
 from repro.core import CommModel
 
@@ -40,41 +43,132 @@ def _archs():
     return list(ARCHS.values())
 
 
+@dataclass(frozen=True)
+class SimOverrides:
+    """Consolidated per-run overrides for :func:`run_one` (and the service
+    job-spec / sweep serializations).
+
+    One object replaces the feature-flag kwargs that accreted across PRs
+    2-5: cluster/trace shape (``n_racks`` / ``n_jobs`` / ``max_time``),
+    feature switches (``contention`` = ``"fair-share"``, ``parallelism`` =
+    ``"auto"``, ``failures`` = ``"mtbf"`` / ``"maintenance"``), the
+    implementation A/B ``naive_topology`` (byte-identical artifacts,
+    different wall-clock, never recorded in provenance), and two
+    *runtime-only* injection points — ``comm`` (a shared or calibrated
+    communication model) and ``archs`` (model-architecture configs) — which
+    hold live Python objects and therefore refuse to serialize.
+    """
+    n_racks: Optional[int] = None
+    n_jobs: Optional[int] = None
+    max_time: Optional[float] = None
+    contention: Optional[str] = None
+    parallelism: Optional[str] = None
+    failures: Optional[str] = None
+    naive_topology: bool = False
+    comm: Optional[CommModel] = None
+    archs: Optional[Sequence[Any]] = None
+
+    _RUNTIME_ONLY = ("comm", "archs")
+
+    def to_dict(self) -> dict:
+        """Wire form: only non-default serializable fields.  Runtime-only
+        fields (``comm`` / ``archs``) must be unset — a sweep task or a
+        service job spec cannot carry live objects."""
+        for name in self._RUNTIME_ONLY:
+            if getattr(self, name) is not None:
+                raise ValueError(
+                    f"SimOverrides.{name} is runtime-only (a live Python "
+                    "object) and cannot be serialized; inject it in-process "
+                    "instead")
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)
+                if f.name not in self._RUNTIME_ONLY
+                and getattr(self, f.name) != f.default}
+
+    @classmethod
+    def from_dict(cls, d: Optional[Mapping] = None) -> "SimOverrides":
+        d = dict(d or {})
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown SimOverrides field(s): "
+                             f"{', '.join(unknown)}")
+        runtime = sorted(set(d) & set(cls._RUNTIME_ONLY))
+        if runtime:
+            raise ValueError(
+                f"SimOverrides field(s) {', '.join(runtime)} are "
+                "runtime-only and cannot come from serialized data")
+        return cls(**d)
+
+    def scenario_kw(self) -> dict:
+        """The subset forwarded to ``Scenario.with_overrides`` (None values
+        are ignored there, so defaults never clobber scenario fields)."""
+        return dict(n_racks=self.n_racks, n_jobs=self.n_jobs,
+                    max_time=self.max_time, contention_mode=self.contention,
+                    parallelism=self.parallelism, failure_mode=self.failures)
+
+
+_DEFAULT_OVERRIDES = SimOverrides()
+# the pre-SimOverrides run_one kwargs, kept as deprecated shims
+LEGACY_RUN_ONE_KWARGS = ("n_racks", "n_jobs", "max_time", "contention",
+                         "parallelism", "failures", "comm", "archs",
+                         "naive_topology")
+
+
+def _resolve_overrides(overrides: Optional[SimOverrides],
+                       legacy: dict) -> SimOverrides:
+    """Merge deprecated legacy kwargs into a SimOverrides, warning once per
+    call for any non-default legacy value and refusing silent conflicts."""
+    unknown = sorted(set(legacy) - set(LEGACY_RUN_ONE_KWARGS))
+    if unknown:
+        raise TypeError("run_one() got unexpected keyword argument(s): "
+                        f"{', '.join(unknown)}")
+    used = {k: v for k, v in legacy.items()
+            if v != getattr(_DEFAULT_OVERRIDES, k)}
+    if overrides is None:
+        overrides = _DEFAULT_OVERRIDES
+    elif not isinstance(overrides, SimOverrides):
+        raise TypeError("overrides must be a SimOverrides, got "
+                        f"{type(overrides).__name__}")
+    if used:
+        warnings.warn(
+            "legacy run_one keyword(s) "
+            f"{', '.join(sorted(used))} are deprecated; pass "
+            "overrides=SimOverrides(...) instead (migration table: "
+            "docs/experiments.md)", DeprecationWarning, stacklevel=3)
+        conflicts = sorted(
+            k for k in used
+            if getattr(overrides, k) != getattr(_DEFAULT_OVERRIDES, k))
+        if conflicts:
+            raise TypeError(
+                f"run_one(): {', '.join(conflicts)} passed both as legacy "
+                "keyword(s) and inside overrides=")
+        overrides = dataclasses.replace(overrides, **used)
+    return overrides
+
+
 def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
-            seed: int = 0, *, n_racks: Optional[int] = None,
-            n_jobs: Optional[int] = None, max_time: Optional[float] = None,
-            contention: Optional[str] = None,
-            parallelism: Optional[str] = None,
-            failures: Optional[str] = None,
-            comm: Optional[CommModel] = None, archs=None,
-            naive_topology: bool = False) -> dict:
+            seed: int = 0, *, overrides: Optional[SimOverrides] = None,
+            **legacy) -> dict:
     """Simulate one cell and return the artifact dict.
 
-    ``n_racks`` / ``n_jobs`` / ``max_time`` override the scenario (rack-count
-    sweeps, --small benchmark modes); ``contention`` switches the shared
-    fabric on (``"fair-share"``) for any scenario; ``parallelism`` switches
-    hybrid DP/TP/PP/EP plan assignment on (``"auto"``); ``failures``
-    switches machine failure/maintenance churn on (``"mtbf"`` /
-    ``"maintenance"``, with the mode's default knobs unless the scenario
-    sets ``failure_kw``); ``comm`` lets
-    callers inject a shared or calibrated communication model.
-    ``naive_topology`` swaps in the retained linear-scan
-    ``NaiveClusterTopology`` — same schedules and byte-identical artifacts,
-    different wall-clock — for differential tests and the fig14 scaling
-    benchmark; being pure implementation choice it is never recorded in
-    the artifact.
+    ``overrides`` is a :class:`SimOverrides` bundling every per-run knob:
+    cluster/trace shape, the contention / parallelism / failures feature
+    switches, the ``naive_topology`` implementation A/B, and the
+    runtime-only ``comm`` / ``archs`` injection points (see the dataclass
+    docstring for semantics).  The pre-consolidation spellings
+    (``run_one(..., n_jobs=80, contention="fair-share")``) still work as
+    thin shims that emit ``DeprecationWarning`` and produce byte-identical
+    artifacts; passing the same field both ways is an error.
     """
+    ov = _resolve_overrides(overrides, legacy)
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
-    scenario = scenario.with_overrides(n_racks=n_racks, n_jobs=n_jobs,
-                                       max_time=max_time,
-                                       contention_mode=contention,
-                                       parallelism=parallelism,
-                                       failure_mode=failures)
-    archs = archs if archs is not None else _archs()
+    scenario = scenario.with_overrides(**ov.scenario_kw())
+    archs = ov.archs if ov.archs is not None else _archs()
     policy = policy or scenario.policy
-    sim = scenario.build_sim(archs, policy=policy, seed=seed, comm=comm,
-                             naive_topology=naive_topology)
+    sim = scenario.build_sim(archs, policy=policy, seed=seed, comm=ov.comm,
+                             naive_topology=ov.naive_topology)
     metrics = sim.run(max_time=scenario.max_time)
     if scenario.failure_mode:
         schema = ARTIFACT_SCHEMA_V4

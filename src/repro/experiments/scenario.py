@@ -256,7 +256,11 @@ class Scenario:
 
     def build_sim(self, archs, policy: Optional[str] = None, seed: int = 0,
                   comm: Optional[CommModel] = None,
-                  naive_topology: bool = False) -> ClusterSimulator:
+                  naive_topology: bool = False,
+                  submit_trace: bool = True) -> ClusterSimulator:
+        """Build the cell's simulator.  ``submit_trace=False`` builds the
+        cluster/network/failure regime but submits no jobs — the service
+        daemon's open-world mode, where arrivals come from the inbox."""
         cluster = self.build_cluster(naive_topology=naive_topology)
         # machines that actually hold GPUs (pre-allocation: full capacity),
         # excluding the empty stride slots of heterogeneous topologies
@@ -274,8 +278,9 @@ class Scenario:
                                slowdown_events=events or None,
                                failure_events=self.build_failures(real, seed),
                                fabric=self.build_fabric(cluster, comm))
-        for job in self.build_trace(archs, seed):
-            sim.submit(job)
+        if submit_trace:
+            for job in self.build_trace(archs, seed):
+                sim.submit(job)
         return sim
 
     def config_dict(self) -> Dict[str, Any]:

@@ -22,12 +22,15 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import List, Optional, Sequence, Tuple
 
-from .runner import artifact_json, run_one
+from .runner import SimOverrides, artifact_json, run_one
 from .scenario import SCENARIOS, get_scenario, scenario_from_csv
 
 DEFAULT_OUT = pathlib.Path("benchmarks") / "artifacts" / "sweep"
 
-Task = Tuple[str, Optional[str], str, int, dict]  # scenario, csv, policy, seed, overrides
+# scenario, csv, policy, seed, SimOverrides.to_dict() wire form (tasks cross
+# a process boundary, so the overrides travel serialized and are rebuilt
+# with SimOverrides.from_dict inside the worker)
+Task = Tuple[str, Optional[str], str, int, dict]
 
 
 def _cell_name(scenario: str, policy: str, seed: int) -> str:
@@ -43,7 +46,8 @@ def _run_cell(task: Task, out_dir: str) -> dict:
         scenario = scenario_from_csv(csv_path, name=scenario_name)
     else:
         scenario = get_scenario(scenario_name)
-    art = run_one(scenario, policy=policy, seed=seed, **overrides)
+    art = run_one(scenario, policy=policy, seed=seed,
+                  overrides=SimOverrides.from_dict(overrides))
     path = pathlib.Path(out_dir) / _cell_name(scenario_name, policy, seed)
     path.write_text(artifact_json(art))
     m = art["metrics"]
@@ -73,13 +77,12 @@ def sweep(scenarios: Sequence[str], policies: Sequence[str],
     """Run the full cross product and return the index dict."""
     out_dir = pathlib.Path(out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
-    overrides = {"n_jobs": n_jobs, "n_racks": n_racks, "max_time": max_time,
-                 "contention": contention, "parallelism": parallelism,
-                 "failures": failures}
-    if naive_topology:
-        # implementation A/B (fig14 reference): artifacts stay identical,
-        # so only the index records that the slow path was timed
-        overrides["naive_topology"] = True
+    # naive_topology is an implementation A/B (fig14 reference): artifacts
+    # stay identical, so only the index records that the slow path was timed
+    overrides = SimOverrides(n_jobs=n_jobs, n_racks=n_racks,
+                             max_time=max_time, contention=contention,
+                             parallelism=parallelism, failures=failures,
+                             naive_topology=naive_topology).to_dict()
     tasks: List[Task] = [
         (sc, csv if (csv and get_scenario(sc).trace == "csv") else None,
          pol, seed, overrides)
@@ -99,7 +102,7 @@ def sweep(scenarios: Sequence[str], policies: Sequence[str],
         "scenarios": list(scenarios),
         "policies": list(policies),
         "seeds": list(seeds),
-        "overrides": {k: v for k, v in overrides.items() if v is not None},
+        "overrides": overrides,  # SimOverrides wire form (non-defaults only)
         "runs": rows,
         "total_wall_s": time.time() - t0,
         "workers": workers,

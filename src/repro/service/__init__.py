@@ -1,0 +1,21 @@
+"""Online scheduler service: a durable daemon around ClusterSimulator.
+
+See docs/service.md for the lifecycle, the job-spec/journal wire formats,
+and the crash-recovery byte-identity guarantee.  Run one with::
+
+    python -m repro.service --state-dir runs/svc --inbox runs/inbox \\
+        --scenario smoke --exit-when-idle
+"""
+from .daemon import (  # noqa: F401
+    SERVICE_ARTIFACT_SCHEMA,
+    SERVICE_SCHEMA,
+    DuplicateJobSpec,
+    SchedulerService,
+    ServiceError,
+)
+from .jobspec import (  # noqa: F401
+    JOBSPEC_SCHEMA,
+    JobSpec,
+    JobSpecError,
+)
+from .journal import JOURNAL_SCHEMA, Journal  # noqa: F401

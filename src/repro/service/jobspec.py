@@ -1,0 +1,163 @@
+"""External job-spec schema for the scheduler service.
+
+A spec is what a client drops into the daemon's inbox (or passes to
+``SchedulerService.submit``): a JSON object naming a model from the
+architecture zoo plus a GPU demand and a size.  The service derives the
+internal :class:`~repro.core.job.Job` fields exactly the way the trace
+makers do (``compute_time_per_iter`` from active-param FLOPs at 40% MFU,
+Tiresias skew from the real model schema, optional auto parallelism plan),
+so a spec-submitted job is indistinguishable from a trace-generated one.
+
+Wire schema (``repro.service.jobspec/v1``)::
+
+    {
+      "schema": "repro.service.jobspec/v1",   # optional, validated if set
+      "name": "team-a/llama-run-17",          # unique; the dedupe key
+      "model": "yi-9b",                       # must be in repro.configs.ARCHS
+      "n_gpus": 8,
+      "gpu_hours": 2.0,                       # XOR total_iters
+      "total_iters": 120000,                  # XOR gpu_hours
+      "tokens_per_gpu_iter": 1024,            # optional (default 1024)
+      "arrival": 3600.0,                      # optional simulated-seconds;
+                                              # clamped up to the live clock
+      "parallelism": "auto"                   # optional; null = pure DP
+    }
+
+The derived ``Job`` (including the resolved iteration count and plan) is
+what the journal records on acceptance, so crash recovery replays the
+exact job even if derivation defaults change between releases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Mapping, Optional
+
+from repro.core.job import Job
+from repro.core.parallelism import ParallelPlan, plan_for
+from repro.core.trace import (
+    PARALLELISM_MODES,
+    _cached_skew,
+    compute_time_per_iter,
+)
+
+JOBSPEC_SCHEMA = "repro.service.jobspec/v1"
+MIN_ITERS = 10  # floor shared with the trace makers
+
+
+class JobSpecError(ValueError):
+    """Spec failed validation (bad field, unknown model, missing size)."""
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    name: str
+    model: str
+    n_gpus: int
+    gpu_hours: Optional[float] = None
+    total_iters: Optional[int] = None
+    tokens_per_gpu_iter: int = 1024
+    arrival: float = 0.0
+    parallelism: Optional[str] = None
+
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise JobSpecError("spec needs a non-empty string 'name'")
+        if not isinstance(self.n_gpus, int) or self.n_gpus < 1:
+            raise JobSpecError(
+                f"spec {self.name!r}: n_gpus must be a positive int, got "
+                f"{self.n_gpus!r}")
+        if (self.gpu_hours is None) == (self.total_iters is None):
+            raise JobSpecError(
+                f"spec {self.name!r}: set exactly one of gpu_hours / "
+                "total_iters")
+        if self.total_iters is not None and self.total_iters < 1:
+            raise JobSpecError(
+                f"spec {self.name!r}: total_iters must be >= 1")
+        if self.gpu_hours is not None and not self.gpu_hours > 0:
+            raise JobSpecError(
+                f"spec {self.name!r}: gpu_hours must be > 0")
+        if self.arrival < 0:
+            raise JobSpecError(f"spec {self.name!r}: arrival must be >= 0")
+        if self.parallelism not in PARALLELISM_MODES:
+            raise JobSpecError(
+                f"spec {self.name!r}: unknown parallelism "
+                f"{self.parallelism!r}; known: "
+                f"{', '.join(str(m) for m in PARALLELISM_MODES)}")
+
+    # -- wire form ------------------------------------------------------
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "JobSpec":
+        d = dict(d)
+        schema = d.pop("schema", JOBSPEC_SCHEMA)
+        if schema != JOBSPEC_SCHEMA:
+            raise JobSpecError(f"unknown job-spec schema {schema!r} "
+                               f"(expected {JOBSPEC_SCHEMA!r})")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise JobSpecError(
+                f"unknown job-spec field(s): {', '.join(unknown)}")
+        try:
+            return cls(**d)
+        except TypeError as e:  # missing required fields
+            raise JobSpecError(str(e)) from None
+
+    def to_dict(self) -> dict:
+        out = {"schema": JOBSPEC_SCHEMA}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.default is dataclasses.MISSING or v != f.default:
+                out[f.name] = v
+        return out
+
+    # -- derivation (mirrors repro.core.trace._make_jobs) ---------------
+    def build_job(self, job_id: int, archs_by_name: Mapping[str, Any],
+                  arrival: Optional[float] = None,
+                  gpus_per_machine: int = 8) -> Job:
+        """Derive the internal Job.  ``arrival`` is the service-resolved
+        arrival (spec arrival clamped up to the live clock)."""
+        cfg = archs_by_name.get(self.model)
+        if cfg is None:
+            raise JobSpecError(
+                f"spec {self.name!r}: unknown model {self.model!r}; known: "
+                f"{', '.join(sorted(archs_by_name))}")
+        t_iter = compute_time_per_iter(cfg.n_active_params(),
+                                       self.tokens_per_gpu_iter)
+        if self.total_iters is not None:
+            iters = self.total_iters
+        else:
+            iters = max(int(self.gpu_hours * 3600.0 / t_iter), MIN_ITERS)
+        plan = None
+        if self.parallelism == "auto":
+            plan = plan_for(cfg, self.n_gpus,
+                            tokens_per_gpu_iter=self.tokens_per_gpu_iter,
+                            gpus_per_machine=gpus_per_machine)
+        return Job(job_id=job_id, model=cfg.name, n_gpus=self.n_gpus,
+                   total_iters=iters, compute_time_per_iter=t_iter,
+                   arrival=self.arrival if arrival is None else arrival,
+                   skew=_cached_skew(cfg), plan=plan)
+
+
+# -- derived-Job wire form (what the journal replays) -----------------------
+
+def job_to_dict(job: Job) -> dict:
+    """The immutable identity of a Job — dynamic scheduling state is NOT
+    serialized (recovery replays submissions onto a snapshot; the snapshot
+    carries the dynamic state)."""
+    return {
+        "job_id": job.job_id,
+        "model": job.model,
+        "n_gpus": job.n_gpus,
+        "total_iters": job.total_iters,
+        "compute_time_per_iter": job.compute_time_per_iter,
+        "arrival": job.arrival,
+        "skew": job.skew,
+        "plan": dataclasses.asdict(job.plan) if job.plan else None,
+    }
+
+
+def job_from_dict(d: Mapping[str, Any]) -> Job:
+    d = dict(d)
+    plan = d.pop("plan", None)
+    return Job(plan=ParallelPlan(**plan) if plan else None, **d)

@@ -1,0 +1,170 @@
+"""The consolidated public API: the ``repro.api`` facade, the
+``SimOverrides`` bundle, the deprecated legacy-kwarg shims (equivalence
+matrix: every legacy spelling must stay byte-identical), and the lint
+guard that keeps shimmed kwargs out of src/ and benchmarks/.
+
+Note: pyproject promotes the shim DeprecationWarning to an error, so
+every legacy call here goes through ``pytest.warns``.
+"""
+import dataclasses
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+import repro.api
+from repro.api import SimOverrides, artifact_json, run_one, run_one_timed
+from repro.experiments.runner import LEGACY_RUN_ONE_KWARGS
+
+SHIM_WARNS = pytest.warns(DeprecationWarning,
+                          match="legacy run_one keyword")
+
+
+# -- the facade --------------------------------------------------------------
+
+def test_facade_exports_resolve():
+    for name in repro.api.__all__:
+        assert getattr(repro.api, name) is not None, name
+
+
+def test_facade_names_match_internals():
+    from repro.experiments.runner import run_one as internal_run_one
+    from repro.service import SchedulerService as internal_svc
+    assert repro.api.run_one is internal_run_one
+    assert repro.api.SchedulerService is internal_svc
+
+
+# -- the shim equivalence matrix ---------------------------------------------
+# one sample per legacy kwarg, spanning all three feature switches; each
+# legacy spelling must produce the byte-identical artifact of the
+# SimOverrides spelling (and warn)
+
+MATRIX = [
+    ("n_jobs", {"n_jobs": 12}),
+    ("n_racks", {"n_racks": 3, "n_jobs": 12}),
+    ("max_time", {"max_time": 20_000.0, "n_jobs": 12}),
+    ("contention", {"contention": "fair-share", "n_jobs": 12}),
+    ("parallelism", {"parallelism": "auto", "n_jobs": 12}),
+    ("failures", {"failures": "mtbf", "n_jobs": 12}),
+    ("naive_topology", {"naive_topology": True, "n_jobs": 12}),
+]
+
+
+@pytest.mark.parametrize("kw", [m[1] for m in MATRIX],
+                         ids=[m[0] for m in MATRIX])
+def test_legacy_kwargs_warn_and_stay_byte_identical(kw):
+    ref = artifact_json(run_one("smoke", policy="dally", seed=0,
+                                overrides=SimOverrides(**kw)))
+    with SHIM_WARNS:
+        legacy = artifact_json(run_one("smoke", policy="dally", seed=0, **kw))
+    assert legacy == ref
+
+
+def test_shim_matrix_covers_every_serializable_legacy_kwarg():
+    """If a kwarg joins LEGACY_RUN_ONE_KWARGS, it must join MATRIX too
+    (comm/archs are runtime-only injection points — no wire spelling)."""
+    covered = {m[0] for m in MATRIX}
+    assert covered == set(LEGACY_RUN_ONE_KWARGS) - {"comm", "archs"}
+
+
+def test_runtime_only_legacy_kwargs_warn_and_inject():
+    from repro.configs import ARCHS
+    archs = list(ARCHS.values())[:4]
+    ref = run_one("smoke", seed=0, overrides=SimOverrides(
+        n_jobs=8, archs=archs))
+    with SHIM_WARNS:
+        legacy = run_one("smoke", seed=0, n_jobs=8, archs=archs)
+    assert artifact_json(legacy) == artifact_json(ref)
+
+
+def test_legacy_and_overrides_conflict_is_an_error():
+    with SHIM_WARNS, pytest.raises(TypeError, match="n_jobs passed both"):
+        run_one("smoke", n_jobs=10, overrides=SimOverrides(n_jobs=12))
+
+
+def test_legacy_same_field_default_value_is_not_a_conflict():
+    # naive_topology=False is the default: not "used", no warning, no error
+    art = run_one("smoke", naive_topology=False,
+                  overrides=SimOverrides(n_jobs=12))
+    assert art["config"]["n_jobs"] == 12
+
+
+def test_unknown_kwarg_is_an_error():
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        run_one("smoke", n_jobz=10)
+
+
+def test_overrides_must_be_simoverrides():
+    with pytest.raises(TypeError, match="must be a SimOverrides"):
+        run_one("smoke", overrides={"n_jobs": 10})
+
+
+def test_run_one_timed_forwards_overrides():
+    art = run_one_timed("smoke", policy="dally", seed=0,
+                        overrides=SimOverrides(n_jobs=12))
+    assert art["config"]["n_jobs"] == 12
+    assert "wall_s" in art
+    # wall_s is volatile: it must not leak into the canonical bytes
+    ref = artifact_json(run_one("smoke", policy="dally", seed=0,
+                                overrides=SimOverrides(n_jobs=12)))
+    assert artifact_json(art) == ref
+
+
+# -- SimOverrides wire form --------------------------------------------------
+
+def test_simoverrides_roundtrip():
+    ov = SimOverrides(n_jobs=40, contention="fair-share", failures="mtbf")
+    assert SimOverrides.from_dict(ov.to_dict()) == ov
+    assert ov.to_dict() == {"n_jobs": 40, "contention": "fair-share",
+                            "failures": "mtbf"}  # non-defaults only
+    assert SimOverrides().to_dict() == {}
+    assert SimOverrides.from_dict(None) == SimOverrides()
+
+
+def test_simoverrides_runtime_only_fields_refuse_serialization():
+    from repro.configs import ARCHS
+    with pytest.raises(ValueError, match="runtime-only"):
+        SimOverrides(archs=list(ARCHS.values())).to_dict()
+    with pytest.raises(ValueError, match="runtime-only"):
+        SimOverrides.from_dict({"comm": "anything"})
+    with pytest.raises(ValueError, match="unknown SimOverrides field"):
+        SimOverrides.from_dict({"n_job": 10})
+
+
+def test_simoverrides_is_frozen():
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        SimOverrides().n_jobs = 5
+
+
+# -- the lint guard ----------------------------------------------------------
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_guard(*argv):
+    return subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_legacy_kwargs.py"),
+         *argv],
+        capture_output=True, text=True, cwd=REPO)
+
+
+def test_lint_guard_passes_on_the_repo():
+    res = _run_guard()
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_lint_guard_catches_a_planted_violation(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "from repro.api import run_one\n"
+        "art = run_one('smoke', n_jobs=10, contention='fair-share')\n")
+    res = _run_guard(str(tmp_path))
+    assert res.returncode == 1
+    assert "n_jobs" in res.stdout and "contention" in res.stdout
+    ok = tmp_path / "ok.py"
+    bad.unlink()
+    ok.write_text(
+        "from repro.api import SimOverrides, run_one\n"
+        "art = run_one('smoke', overrides=SimOverrides(n_jobs=10))\n")
+    assert _run_guard(str(tmp_path)).returncode == 0

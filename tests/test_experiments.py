@@ -10,8 +10,8 @@ from repro.core import (ClusterTopology, CommModel, load_csv_trace,
                         make_mixed_trace, save_csv_trace)
 from repro.core.topology import Placement
 from repro.experiments import (SCENARIOS, ContentionSchedule, Scenario,
-                               artifact_json, get_scenario, run_one,
-                               scenario_from_csv)
+                               SimOverrides, artifact_json, get_scenario,
+                               run_one, scenario_from_csv)
 from repro.experiments.sweep import sweep
 
 ARCHS_L = list(ARCHS.values())
@@ -78,8 +78,9 @@ def test_heterogeneous_rack_topology():
 # -- single-cell runner ------------------------------------------------------
 
 def test_run_one_artifact_schema_and_determinism():
-    art1 = run_one("smoke", policy="dally", seed=0, n_jobs=20)
-    art2 = run_one("smoke", policy="dally", seed=0, n_jobs=20)
+    ov = SimOverrides(n_jobs=20)
+    art1 = run_one("smoke", policy="dally", seed=0, overrides=ov)
+    art2 = run_one("smoke", policy="dally", seed=0, overrides=ov)
     assert art1["schema"].startswith("repro.experiments.artifact/")
     for key in ("scenario", "policy", "seed", "config", "metrics"):
         assert key in art1
@@ -91,8 +92,8 @@ def test_run_one_artifact_schema_and_determinism():
 
 
 def test_run_one_scenario_overrides():
-    art = run_one("paper-batch", policy="gandiva", seed=1, n_jobs=15,
-                  n_racks=2)
+    art = run_one("paper-batch", policy="gandiva", seed=1,
+                  overrides=SimOverrides(n_jobs=15, n_racks=2))
     assert art["config"]["n_jobs"] == 15
     assert art["config"]["n_racks"] == 2
     assert art["metrics"]["n_finished"] == 15
@@ -241,7 +242,7 @@ def test_csv_foreign_model_names_are_remapped(tmp_path):
     jobs = load_csv_trace(path, ARCHS_L)
     assert all(j.model in ARCHS for j in jobs)
     art = run_one(scenario_from_csv(str(path)), policy="dally", seed=0,
-                  n_racks=2)
+                  overrides=SimOverrides(n_racks=2))
     assert art["metrics"]["n_finished"] == 2
 
 

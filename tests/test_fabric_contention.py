@@ -8,7 +8,7 @@ from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
 from repro.core.fabric import DEFAULT_SPINE_X, DEFAULT_UPLINK_X
 from repro.core.policies import make_policy
 from repro.core.topology import Placement
-from repro.experiments import run_one
+from repro.experiments import SimOverrides, run_one
 
 ARCHS_L = list(ARCHS.values())
 NIC = 25e9  # tpu_v5e network-tier bandwidth (per participant)
@@ -208,16 +208,18 @@ def test_contention_strictly_delays_completion():
 
 
 def test_reprice_deterministic_same_seed():
-    a = run_one("congested-spine", policy="dally", seed=3, n_jobs=40)
-    b = run_one("congested-spine", policy="dally", seed=3, n_jobs=40)
+    ov = SimOverrides(n_jobs=40)
+    a = run_one("congested-spine", policy="dally", seed=3, overrides=ov)
+    b = run_one("congested-spine", policy="dally", seed=3, overrides=ov)
     assert a == b
 
 
 # -- scenario threading ------------------------------------------------------
 
 def test_contention_override_produces_v2_artifact():
-    art = run_one("smoke", policy="dally", seed=0, n_jobs=10,
-                  contention="fair-share")
+    art = run_one("smoke", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=10,
+                                         contention="fair-share"))
     assert art["schema"] == "repro.experiments.artifact/v2"
     assert art["config"]["contention_mode"] == "fair-share"
     # provenance records the EFFECTIVE capacities (defaults resolved
@@ -228,7 +230,8 @@ def test_contention_override_produces_v2_artifact():
 
 
 def test_disabled_contention_keeps_v1_artifact():
-    art = run_one("smoke", policy="dally", seed=0, n_jobs=10)
+    art = run_one("smoke", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=10))
     assert art["schema"] == "repro.experiments.artifact/v1"
     assert "contention_mode" not in art["config"]
     assert "n_reprices" not in art["metrics"]
@@ -236,8 +239,8 @@ def test_disabled_contention_keeps_v1_artifact():
 
 def test_unknown_contention_mode_is_a_clear_error():
     with pytest.raises(ValueError, match="contention_mode"):
-        run_one("smoke", policy="dally", seed=0, n_jobs=4,
-                contention="magic")
+        run_one("smoke", policy="dally", seed=0,
+                overrides=SimOverrides(n_jobs=4, contention="magic"))
 
 
 # -- acceptance: consolidation beats scatter under congestion ---------------
@@ -256,8 +259,9 @@ def test_contention_widens_the_consolidation_gap():
     """The whole point of the subsystem: scatter pays much more for its
     placements on a congested fabric than on an empty one."""
     n = 120
+    ov = SimOverrides(n_jobs=n)
     sc_cont = run_one("congested-spine", policy="scatter", seed=0,
-                      n_jobs=n)["metrics"]
+                      overrides=ov)["metrics"]
     sc_empty = run_one("paper-batch", policy="scatter", seed=0,
-                       n_jobs=n)["metrics"]
+                       overrides=ov)["metrics"]
     assert sc_cont["total_comm_time"] > 2 * sc_empty["total_comm_time"]

@@ -17,7 +17,7 @@ from repro.core.job import Job
 from repro.core.policies import make_policy
 from repro.core.topology import Placement
 from repro.core.trace import resolve_failure_kw
-from repro.experiments import Scenario, run_one
+from repro.experiments import Scenario, SimOverrides, run_one
 from repro.experiments.sweep import sweep
 
 ARCHS_L = list(ARCHS.values())
@@ -185,7 +185,8 @@ def test_registry_covers_failure_scenarios():
 
 
 def test_failure_artifact_schema_v4_and_provenance():
-    art = run_one("failure-prone", policy="dally", seed=0, n_jobs=20)
+    art = run_one("failure-prone", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=20))
     assert art["schema"] == "repro.experiments.artifact/v4"
     cfg = art["config"]
     assert cfg["failure_mode"] == "mtbf"
@@ -196,7 +197,8 @@ def test_failure_artifact_schema_v4_and_provenance():
 
 
 def test_hotspot_flaky_composes_churn_with_fabric():
-    art = run_one("hotspot-flaky", policy="dally", seed=1, n_jobs=25)
+    art = run_one("hotspot-flaky", policy="dally", seed=1,
+                  overrides=SimOverrides(n_jobs=25))
     assert art["schema"] == "repro.experiments.artifact/v4"
     m = art["metrics"]
     assert "n_reprices" in m and "n_machine_failures" in m
@@ -205,9 +207,11 @@ def test_hotspot_flaky_composes_churn_with_fabric():
 
 
 def test_failures_override_flips_any_scenario_to_v4():
-    on = run_one("smoke", policy="dally", seed=0, n_jobs=15,
-                 failures="maintenance")
-    off = run_one("smoke", policy="dally", seed=0, n_jobs=15)
+    on = run_one("smoke", policy="dally", seed=0,
+                 overrides=SimOverrides(n_jobs=15,
+                                        failures="maintenance"))
+    off = run_one("smoke", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=15))
     assert on["schema"] == "repro.experiments.artifact/v4"
     assert off["schema"] == "repro.experiments.artifact/v1"
     assert "failure_mode" not in off["config"]
@@ -218,14 +222,15 @@ def test_failures_mode_switch_resets_incompatible_kw():
     """Regression: overriding failure-prone (mtbf knobs) to maintenance
     must apply the new mode's defaults, not reject mtbf/mttr as unknown
     keys — the sweep documents --failures as overriding every scenario."""
-    art = run_one("failure-prone", policy="dally", seed=0, n_jobs=15,
-                  failures="maintenance")
+    art = run_one("failure-prone", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=15,
+                                         failures="maintenance"))
     assert art["config"]["failure_mode"] == "maintenance"
     assert "mtbf" not in art["config"]["failure_kw"]
     assert art["config"]["failure_kw"]["window"] == 3600.0
     # same-mode override keeps the scenario's tuned knobs
-    same = run_one("failure-prone", policy="dally", seed=0, n_jobs=15,
-                   failures="mtbf")
+    same = run_one("failure-prone", policy="dally", seed=0,
+                   overrides=SimOverrides(n_jobs=15, failures="mtbf"))
     assert same["config"]["failure_kw"]["mttr"] == 2 * 3600.0
 
 
@@ -254,8 +259,9 @@ def test_fig15_acceptance_dally_beats_scatter_under_churn():
     """Consolidated placements intersect fewer machines, so each failure
     kills fewer jobs: dally's makespan must beat the scatter baseline on
     the failure-prone cell (the fig15 headline, pinned at CI scale)."""
-    da = run_one("failure-prone", policy="dally", seed=0, n_jobs=80)
-    sc = run_one("failure-prone", policy="scatter", seed=0, n_jobs=80)
+    ov = SimOverrides(n_jobs=80)
+    da = run_one("failure-prone", policy="dally", seed=0, overrides=ov)
+    sc = run_one("failure-prone", policy="scatter", seed=0, overrides=ov)
     dm, sm = da["metrics"], sc["metrics"]
     assert dm["n_job_failures"] > 0 and sm["n_job_failures"] > 0
     assert dm["makespan"] < sm["makespan"]

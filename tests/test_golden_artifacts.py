@@ -14,7 +14,7 @@ baseline.
 """
 import hashlib
 
-from repro.experiments import artifact_json, run_one
+from repro.experiments import SimOverrides, artifact_json, run_one
 
 # (scenario, policy, seed, n_jobs) -> sha256 of the canonical artifact JSON.
 # These failure-OFF cells predate the churn subsystem and pin that it left
@@ -59,7 +59,8 @@ EXPECTED_V2 = {
 
 def _digest(scenario, policy, seed, n_jobs,
             schema="repro.experiments.artifact/v1"):
-    art = run_one(scenario, policy=policy, seed=seed, n_jobs=n_jobs)
+    art = run_one(scenario, policy=policy, seed=seed,
+                  overrides=SimOverrides(n_jobs=n_jobs))
     assert art["schema"] == schema
     return hashlib.sha256(artifact_json(art).encode()).hexdigest()
 
@@ -88,6 +89,7 @@ def test_golden_artifact_digests_v4_failures():
 
 def test_golden_artifacts_are_volatile_free():
     """The pinned serialization must never contain wall-clock keys."""
-    art = run_one("smoke", policy="dally", seed=0, n_jobs=20)
+    art = run_one("smoke", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=20))
     art["wall_s"] = 1.23
     assert '"wall_s"' not in artifact_json(art)

@@ -11,7 +11,7 @@ from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
                         plan_for, pure_dp_plan)
 from repro.core.policies import make_policy
 from repro.core.topology import Placement
-from repro.experiments import Scenario, run_one
+from repro.experiments import Scenario, SimOverrides, run_one
 
 ARCHS_L = list(ARCHS.values())
 NIC = 25e9
@@ -272,8 +272,8 @@ def test_unknown_parallelism_mode_is_a_clear_error():
     with pytest.raises(ValueError, match="parallelism"):
         make_batch_trace(ARCHS_L, n_jobs=2, seed=0, parallelism="magic")
     with pytest.raises(ValueError, match="parallelism"):
-        run_one("smoke", policy="dally", seed=0, n_jobs=4,
-                parallelism="magic")
+        run_one("smoke", policy="dally", seed=0,
+                overrides=SimOverrides(n_jobs=4, parallelism="magic"))
 
 
 def test_plans_respect_scenario_machine_width():
@@ -310,14 +310,15 @@ def test_families_filter_and_error():
 # -- artifact schema v3 ------------------------------------------------------
 
 def test_parallelism_emits_v3_artifact():
-    art = run_one("smoke", policy="dally", seed=0, n_jobs=10,
-                  parallelism="auto")
+    art = run_one("smoke", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=10, parallelism="auto"))
     assert art["schema"] == "repro.experiments.artifact/v3"
     assert art["config"]["parallelism"] == "auto"
 
 
 def test_moe_heavy_artifact_is_v3_with_contention_provenance():
-    art = run_one("moe-heavy", policy="dally", seed=0, n_jobs=12)
+    art = run_one("moe-heavy", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=12))
     assert art["schema"] == "repro.experiments.artifact/v3"
     assert art["config"]["parallelism"] == "auto"
     assert art["config"]["contention_mode"] == "fair-share"
@@ -325,7 +326,8 @@ def test_moe_heavy_artifact_is_v3_with_contention_provenance():
 
 
 def test_plan_less_cells_keep_v1_schema():
-    art = run_one("smoke", policy="dally", seed=0, n_jobs=10)
+    art = run_one("smoke", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=10))
     assert art["schema"] == "repro.experiments.artifact/v1"
     assert "parallelism" not in art["config"]
     assert "checkpoint_overhead" not in art["config"]
@@ -387,8 +389,10 @@ def test_scenario_checkpoint_overhead_recorded_as_v3():
 def test_dally_blind_identical_on_plan_less_traces():
     """dally-blind differs from dally ONLY through plan handling: on a
     plan-less workload the two schedules are identical."""
-    a = run_one("smoke", policy="dally", seed=0, n_jobs=25)["metrics"]
-    b = run_one("smoke", policy="dally-blind", seed=0, n_jobs=25)["metrics"]
+    ov = SimOverrides(n_jobs=25)
+    a = run_one("smoke", policy="dally", seed=0, overrides=ov)["metrics"]
+    b = run_one("smoke", policy="dally-blind", seed=0,
+                overrides=ov)["metrics"]
     assert a == b
 
 
@@ -401,17 +405,19 @@ def test_pattern_aware_beats_pattern_blind_on_moe_heavy():
     final placement swings a seed by ±10%), so the claim — like fig13's
     headline — is over a seed aggregate, and it must hold by a margin."""
     aware = blind = 0.0
+    ov = SimOverrides(n_jobs=150)
     for seed in (0, 1, 2, 3):
         aware += run_one("moe-heavy", policy="dally", seed=seed,
-                         n_jobs=150)["metrics"]["total_comm_time"]
+                         overrides=ov)["metrics"]["total_comm_time"]
         blind += run_one("moe-heavy", policy="dally-blind", seed=seed,
-                         n_jobs=150)["metrics"]["total_comm_time"]
+                         overrides=ov)["metrics"]["total_comm_time"]
     assert aware < 0.95 * blind
 
 
 def test_pattern_aware_beats_scatter_on_moe_heavy():
+    ov = SimOverrides(n_jobs=150)
     aware = run_one("moe-heavy", policy="dally", seed=0,
-                    n_jobs=150)["metrics"]
+                    overrides=ov)["metrics"]
     scatter = run_one("moe-heavy", policy="scatter", seed=0,
-                      n_jobs=150)["metrics"]
+                      overrides=ov)["metrics"]
     assert aware["total_comm_time"] < 0.5 * scatter["total_comm_time"]

@@ -1,0 +1,395 @@
+"""Scheduler-service subsystem: incremental arrivals, the durable journal,
+crash recovery (byte-identity), the inbox, and the live state query.
+
+The determinism backbone these tests lean on: the simulator's event heap
+orders same-time events by (kind, seq), so processed state depends only on
+the sequence of (submission, event-step) operations — never on tick
+batching, snapshot points, or process restarts.
+"""
+import json
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.simulator import ClusterSimulator
+from repro.core.trace import compute_time_per_iter, make_batch_trace
+from repro.experiments import SimOverrides, get_scenario
+from repro.service import (
+    DuplicateJobSpec,
+    JobSpec,
+    JobSpecError,
+    Journal,
+    SchedulerService,
+    ServiceError,
+)
+from repro.service.jobspec import job_from_dict, job_to_dict
+
+ARCHS_L = list(ARCHS.values())
+
+SPECS = [
+    {"name": f"job-{i:03d}", "model": m, "n_gpus": g, "gpu_hours": h,
+     "arrival": i * 200.0}
+    for i, (m, g, h) in enumerate([
+        ("yi-9b", 8, 2.0), ("qwen3-1.7b", 1, 0.5),
+        ("qwen2-moe-a2.7b", 4, 1.0), ("recurrentgemma-2b", 2, 0.8),
+        ("minicpm3-4b", 16, 3.0), ("yi-9b", 4, 1.5),
+        ("qwen3-1.7b", 2, 0.3), ("qwen3-moe-30b-a3b", 8, 2.5),
+    ])]
+
+
+def _drain(svc):
+    while not svc.sim.idle:
+        svc.tick()
+
+
+def _run_service(state_dir, overrides, specs=SPECS, events_per_tick=7,
+                 snapshot_every=20, crash_after_ticks=None):
+    """Run a service over ``specs``; optionally 'crash' (abandon without
+    finalize) after N ticks.  Returns artifact bytes, or None if crashed."""
+    svc = SchedulerService(state_dir, scenario="smoke", seed=0,
+                           overrides=overrides,
+                           events_per_tick=events_per_tick,
+                           snapshot_every=snapshot_every)
+    for s in specs:
+        svc.submit(s)
+    ticks = 0
+    while not svc.sim.idle:
+        svc.tick()
+        ticks += 1
+        if crash_after_ticks and ticks >= crash_after_ticks:
+            svc.close()  # the file handle only; no finalize, no snapshot
+            return None
+    svc.finalize()
+    svc.close()
+    return (pathlib.Path(state_dir) / "artifact.json").read_bytes()
+
+
+# -- incremental arrivals == batch (the seam run_one also uses) --------------
+
+def test_incremental_stepping_equals_batch_run():
+    sc = get_scenario("smoke").with_overrides(n_jobs=25)
+    ref = sc.build_sim(ARCHS_L, policy="dally", seed=0).run()
+    sim = sc.build_sim(ARCHS_L, policy="dally", seed=0)
+    sim.begin()
+    while not sim.idle:
+        sim.step_events(7)  # odd chunk size: exercises mid-round splits
+    assert sim.results() == ref
+
+
+def test_online_submission_interleaving_equals_batch():
+    """Jobs submitted one at a time, each handed over just before the
+    clock reaches its arrival, give the same schedule as the
+    pre-materialized batch trace — online == offline.
+
+    Staying one submission ahead matters: a pending arrival keeps the
+    scheduling-round chain armed across cluster-drain gaps exactly like
+    the batch heap does, so the round phase never shifts (a client that
+    submits only at the arrival instant may see rounds re-anchor to its
+    submission times on a fully drained cluster — see docs/service.md)."""
+    sc = get_scenario("paper-poisson").with_overrides(n_racks=2, n_jobs=15)
+    ref = sc.build_sim(ARCHS_L, policy="dally", seed=3).run()
+    sim = sc.build_sim(ARCHS_L, policy="dally", seed=3, submit_trace=False)
+    sim.begin()
+    prev_arrival = 0.0
+    for job in sc.build_trace(ARCHS_L, seed=3):
+        sim.advance_to(prev_arrival)
+        sim.submit(job)
+        prev_arrival = job.arrival
+    while not sim.idle:
+        sim.step_events(11)
+    assert sim.results() == ref
+
+
+def test_snapshot_restore_mid_run_is_invisible():
+    sc = get_scenario("smoke").with_overrides(n_jobs=25,
+                                              failure_mode="mtbf")
+    ref = sc.build_sim(ARCHS_L, policy="dally", seed=0).run()
+    sim = sc.build_sim(ARCHS_L, policy="dally", seed=0)
+    sim.begin()
+    sim.step_events(40)
+    clone = ClusterSimulator.restore(sim.snapshot_bytes())
+    while not clone.idle:
+        clone.step_events(13)
+    assert clone.results() == ref
+
+
+# -- crash recovery: the byte-identity acceptance criteria -------------------
+
+@pytest.mark.parametrize("overrides,crash_after", [
+    (SimOverrides(contention="fair-share"), 9),   # contention-on
+    (SimOverrides(failures="mtbf", n_racks=2), 5),  # failures-on
+], ids=["contention", "failures"])
+def test_crash_recovery_byte_identity(tmp_path, overrides, crash_after):
+    ref = _run_service(tmp_path / "ref", overrides)
+    assert _run_service(tmp_path / "crash", overrides,
+                        crash_after_ticks=crash_after) is None
+    # restart against the same state dir: recover + drain + finalize.
+    # different tick size on purpose — batching must be invisible.
+    svc = SchedulerService(tmp_path / "crash", events_per_tick=13)
+    _drain(svc)
+    svc.finalize()
+    svc.close()
+    assert (tmp_path / "crash" / "artifact.json").read_bytes() == ref
+
+
+def test_recovery_with_no_snapshot_replays_full_journal(tmp_path):
+    ov = SimOverrides(contention="fair-share")
+    ref = _run_service(tmp_path / "ref", ov)
+    # huge snapshot_every: the crashed run journals submits but never
+    # checkpoints, so recovery rebuilds from scratch + full replay
+    assert _run_service(tmp_path / "crash", ov, snapshot_every=10**9,
+                        crash_after_ticks=6) is None
+    recs = Journal.read(tmp_path / "crash" / "journal.jsonl")
+    assert not [r for r in recs if r["type"] == "snapshot"]
+    svc = SchedulerService(tmp_path / "crash")
+    _drain(svc)
+    svc.finalize()
+    svc.close()
+    assert (tmp_path / "crash" / "artifact.json").read_bytes() == ref
+
+
+def test_recovery_survives_torn_journal_tail(tmp_path):
+    ov = SimOverrides(contention="fair-share")
+    ref = _run_service(tmp_path / "ref", ov)
+    assert _run_service(tmp_path / "crash", ov,
+                        crash_after_ticks=8) is None
+    # simulate the torn final write of a SIGKILLed append
+    journal = tmp_path / "crash" / "journal.jsonl"
+    with open(journal, "a") as fh:
+        fh.write('{"type": "event", "op": "plac')
+    svc = SchedulerService(tmp_path / "crash")
+    _drain(svc)
+    svc.finalize()
+    svc.close()
+    assert (tmp_path / "crash" / "artifact.json").read_bytes() == ref
+
+
+def test_corrupt_snapshot_falls_back_to_earlier_state(tmp_path):
+    ov = SimOverrides(contention="fair-share")
+    ref = _run_service(tmp_path / "ref", ov)
+    assert _run_service(tmp_path / "crash", ov, snapshot_every=10,
+                        crash_after_ticks=8) is None
+    recs = Journal.read(tmp_path / "crash" / "journal.jsonl")
+    snaps = [r for r in recs if r["type"] == "snapshot"]
+    assert len(snaps) >= 2
+    # corrupt the newest snapshot: recovery must verify the digest and
+    # fall back to the previous one
+    (tmp_path / "crash" / snaps[-1]["file"]).write_bytes(b"garbage")
+    svc = SchedulerService(tmp_path / "crash")
+    _drain(svc)
+    svc.finalize()
+    svc.close()
+    assert (tmp_path / "crash" / "artifact.json").read_bytes() == ref
+
+
+# -- submission / inbox ------------------------------------------------------
+
+def test_duplicate_spec_idempotent_and_conflicting_rejected(tmp_path):
+    svc = SchedulerService(tmp_path / "s", scenario="smoke")
+    jid = svc.submit(SPECS[0])
+    assert svc.submit(SPECS[0]) == jid  # identical re-submit: idempotent
+    with pytest.raises(DuplicateJobSpec):
+        svc.submit({**SPECS[0], "n_gpus": 4})
+    svc.close()
+
+
+def test_inbox_ingestion_and_rejection(tmp_path):
+    inbox = tmp_path / "inbox"
+    inbox.mkdir()
+    for s in SPECS[:4]:
+        (inbox / f"{s['name']}.json").write_text(json.dumps(s))
+    (inbox / "broken.json").write_text("{not json")
+    (inbox / "badmodel.json").write_text(json.dumps(
+        {"name": "bad", "model": "nope", "n_gpus": 1, "gpu_hours": 1.0}))
+    svc = SchedulerService(tmp_path / "s", scenario="smoke", inbox=inbox)
+    assert svc.poll_inbox() == 4
+    assert not list(inbox.glob("*.json"))
+    assert len(list((inbox / "processed").glob("*.json"))) == 4
+    rejected = sorted(p.name for p in (inbox / "rejected").glob("*.json"))
+    assert rejected == ["badmodel.json", "broken.json"]
+    assert (inbox / "rejected" / "badmodel.json.error").exists()
+    svc.close()
+
+
+def test_inbox_run_matches_in_process_submissions(tmp_path):
+    ov = SimOverrides(contention="fair-share")
+    ref = _run_service(tmp_path / "ref", ov)
+    inbox = tmp_path / "inbox"
+    inbox.mkdir()
+    for s in SPECS:
+        (inbox / f"{s['name']}.json").write_text(json.dumps(s))
+    svc = SchedulerService(tmp_path / "svc", scenario="smoke", overrides=ov,
+                           inbox=inbox)
+    svc.serve(exit_when_idle=True)
+    svc.close()
+    assert (tmp_path / "svc" / "artifact.json").read_bytes() == ref
+
+
+def test_oversized_spec_is_journaled_and_rejected_by_the_sim(tmp_path):
+    svc = SchedulerService(tmp_path / "s", scenario="smoke")
+    svc.submit({"name": "huge", "model": "yi-9b", "n_gpus": 4096,
+                "gpu_hours": 1.0})
+    assert len(svc.sim.rejected) == 1
+    svc.journal.flush()
+    recs = Journal.read(svc.journal_path)
+    assert [r["op"] for r in recs if r["type"] == "event"] == ["reject"]
+    svc.close()
+
+
+def test_jobspec_validation():
+    with pytest.raises(JobSpecError, match="exactly one"):
+        JobSpec(name="x", model="yi-9b", n_gpus=1)
+    with pytest.raises(JobSpecError, match="exactly one"):
+        JobSpec(name="x", model="yi-9b", n_gpus=1, gpu_hours=1.0,
+                total_iters=10)
+    with pytest.raises(JobSpecError, match="n_gpus"):
+        JobSpec(name="x", model="yi-9b", n_gpus=0, gpu_hours=1.0)
+    with pytest.raises(JobSpecError, match="parallelism"):
+        JobSpec(name="x", model="yi-9b", n_gpus=1, gpu_hours=1.0,
+                parallelism="magic")
+    with pytest.raises(JobSpecError, match="schema"):
+        JobSpec.from_dict({"schema": "bogus/v9", "name": "x",
+                           "model": "yi-9b", "n_gpus": 1, "gpu_hours": 1.0})
+    with pytest.raises(JobSpecError, match="unknown job-spec field"):
+        JobSpec.from_dict({"name": "x", "model": "yi-9b", "n_gpus": 1,
+                           "gpu_hours": 1.0, "priority": 99})
+
+
+def test_jobspec_derivation_mirrors_trace_makers():
+    """A spec-built job must be indistinguishable from a trace-generated
+    one: same compute_time_per_iter formula, same skew, same MIN_ITERS
+    floor."""
+    trace_job = make_batch_trace(ARCHS_L, n_jobs=1, seed=0)[0]
+    cfg = next(c for c in ARCHS_L if c.name == trace_job.model)
+    spec = JobSpec(name="twin", model=trace_job.model,
+                   n_gpus=trace_job.n_gpus,
+                   total_iters=trace_job.total_iters,
+                   tokens_per_gpu_iter=1024)
+    job = spec.build_job(0, dict(ARCHS))
+    assert job.skew == trace_job.skew
+    assert job.compute_time_per_iter == compute_time_per_iter(
+        cfg.n_active_params(), 1024)
+    # round-trip through the journal wire form preserves identity exactly
+    assert job_to_dict(job_from_dict(job_to_dict(job))) == job_to_dict(job)
+
+
+def test_reopening_with_conflicting_config_errors(tmp_path):
+    svc = SchedulerService(tmp_path / "s", scenario="smoke", seed=0,
+                           overrides=SimOverrides(contention="fair-share"))
+    svc.close()
+    with pytest.raises(ServiceError, match="scenario"):
+        SchedulerService(tmp_path / "s", scenario="paper-batch")
+    with pytest.raises(ServiceError, match="overrides"):
+        SchedulerService(tmp_path / "s",
+                         overrides=SimOverrides(failures="mtbf"))
+    # unspecified args defer to service.json: reopening plain works
+    SchedulerService(tmp_path / "s").close()
+
+
+# -- the live cluster-state query --------------------------------------------
+
+def test_cluster_state_content_and_read_only(tmp_path):
+    svc = SchedulerService(tmp_path / "s", scenario="smoke",
+                           overrides=SimOverrides(contention="fair-share"))
+    for s in SPECS:
+        svc.submit({**s, "arrival": 0.0, "name": "now-" + s["name"]})
+    svc.sim.begin()
+    svc.sim.step_events(12)
+    before = svc.sim.snapshot_bytes()
+    state = svc.cluster_state()
+    # THE guarantee: observing a live daemon must not perturb the schedule
+    # (AutoTuner.get_tuned_timer mutates; the query uses peek_timer)
+    assert svc.sim.snapshot_bytes() == before
+    assert state["total_gpus"] == 128  # smoke: 2 racks x 8 x 8
+    assert len(state["racks"]) == 2
+    used = state["total_gpus"] - state["free_gpus"]
+    assert used == sum(j["n_gpus"] for j in state["running"])
+    assert state["failed_machines"] == []
+    for j in state["running"] + state["waiting"]:
+        assert j["name"].startswith("now-job-")
+    if state["waiting"]:
+        timers = state["delay_timers"]
+        assert set(timers) == {str(j["n_gpus"]) for j in state["waiting"]}
+        for t in timers.values():
+            assert t["machine"] >= 0.0 and t["rack"] >= 0.0
+    svc.close()
+
+
+def test_peek_timer_matches_get_tuned_timer():
+    """peek_timer must return the same values the policy actually uses —
+    without mutating.  Run a cell far enough for the tuner to have real
+    observations, then compare tier x demand grids."""
+    sc = get_scenario("smoke").with_overrides(n_jobs=20)
+    sim = sc.build_sim(ARCHS_L, policy="dally", seed=0)
+    sim.begin()
+    sim.step_events(120)
+    tuner = sim.policy.tuner
+    now = sim.clock
+    for tier in ("machine", "rack"):
+        for g in (1, 2, 4, 8, 16):
+            peeked = tuner.peek_timer(tier, g, now)
+            assert peeked == tuner.get_tuned_timer(tier, g, now)
+
+
+# -- the real thing: SIGKILL a daemon subprocess -----------------------------
+
+@pytest.mark.skipif(sys.platform == "win32", reason="POSIX signals")
+def test_sigkill_daemon_recovery_byte_identity(tmp_path):
+    """End-to-end: a daemon process killed with SIGKILL mid-run recovers
+    on restart to a byte-identical final artifact (runs the same protocol
+    as the CI service-smoke job, scaled down)."""
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.pop("XLA_FLAGS", None)
+
+    def cmd(state, inbox, *extra):
+        return [sys.executable, "-m", "repro.service",
+                "--state-dir", str(state), "--inbox", str(inbox),
+                "--scenario", "smoke", "--events-per-tick", "5",
+                "--snapshot-every", "25",
+                "--overrides", '{"contention": "fair-share"}'] + list(extra)
+
+    specs = [dict(s, arrival=i * 400.0) for i, s in enumerate(SPECS)]
+    for d in ("ref-inbox", "inbox"):
+        (tmp_path / d).mkdir()
+        for s in specs:
+            (tmp_path / d / f"{s['name']}.json").write_text(json.dumps(s))
+
+    subprocess.run(cmd(tmp_path / "ref", tmp_path / "ref-inbox",
+                       "--exit-when-idle"),
+                   check=True, env=env, cwd=repo, timeout=300)
+    ref = (tmp_path / "ref" / "artifact.json").read_bytes()
+
+    proc = subprocess.Popen(cmd(tmp_path / "state", tmp_path / "inbox",
+                                "--throttle", "0.05"), env=env, cwd=repo)
+    journal = tmp_path / "state" / "journal.jsonl"
+    try:
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            txt = journal.read_text() if journal.exists() else ""
+            if txt.count('"type": "snapshot"') >= 1 \
+                    and txt.count('"type": "submit"') == len(specs):
+                break
+            assert proc.poll() is None, "daemon died before kill"
+            time.sleep(0.1)
+        else:
+            pytest.fail("daemon produced no snapshot in time")
+        proc.send_signal(signal.SIGKILL)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait()
+
+    subprocess.run(cmd(tmp_path / "state", tmp_path / "inbox",
+                       "--exit-when-idle"),
+                   check=True, env=env, cwd=repo, timeout=300)
+    assert (tmp_path / "state" / "artifact.json").read_bytes() == ref

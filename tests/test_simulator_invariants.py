@@ -10,7 +10,7 @@ from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
                         FairShareFabric, make_batch_trace,
                         make_poisson_trace)
 from repro.core.policies import make_policy
-from repro.experiments import run_one
+from repro.experiments import SimOverrides, run_one
 
 ARCHS_L = list(ARCHS.values())
 COMM = CommModel.from_configs(ARCHS_L)
@@ -101,10 +101,11 @@ def test_same_seed_same_results_dict(seed, policy, contended):
 
 
 def test_run_one_deterministic_with_contention():
+    ov = SimOverrides(n_jobs=30)
     a = run_one("oversubscribed-uplinks", policy="tiresias", seed=7,
-                n_jobs=30)
+                overrides=ov)
     b = run_one("oversubscribed-uplinks", policy="tiresias", seed=7,
-                n_jobs=30)
+                overrides=ov)
     assert a == b
 
 

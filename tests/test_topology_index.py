@@ -14,7 +14,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.topology import ClusterTopology, NaiveClusterTopology
-from repro.experiments import artifact_json, run_one
+from repro.experiments import SimOverrides, artifact_json, run_one
 
 LEVELS = ("machine", "rack", "network", "scatter")
 
@@ -218,7 +218,9 @@ def test_fail_machine_requires_fully_free():
 def test_naive_and_indexed_artifacts_byte_identical(scenario, policy, n_jobs):
     """End-to-end differential: the topology implementation must be
     invisible in the artifact bytes for whole simulated cells."""
-    fast = run_one(scenario, policy=policy, seed=2, n_jobs=n_jobs)
-    naive = run_one(scenario, policy=policy, seed=2, n_jobs=n_jobs,
-                    naive_topology=True)
+    fast = run_one(scenario, policy=policy, seed=2,
+                   overrides=SimOverrides(n_jobs=n_jobs))
+    naive = run_one(scenario, policy=policy, seed=2,
+                    overrides=SimOverrides(n_jobs=n_jobs,
+                                           naive_topology=True))
     assert artifact_json(fast) == artifact_json(naive)

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Lint guard: the repo must eat its own consolidated API.
+
+The legacy ``run_one(..., n_jobs=...)`` keyword spellings are deprecated
+shims kept for external callers; nothing inside ``src/`` or ``benchmarks/``
+may use them (tests exercising the shims are exempt).  ruff has no custom
+rules, so this walks the AST: every ``run_one`` / ``run_one_timed`` call
+whose keywords intersect the legacy set is a violation.
+
+    python tools/check_legacy_kwargs.py [root...]
+
+Exit 0 = clean; exit 1 = violations listed on stdout.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+TARGET_CALLS = {"run_one", "run_one_timed"}
+LEGACY_KWARGS = {"n_racks", "n_jobs", "max_time", "contention",
+                 "parallelism", "failures", "comm", "archs",
+                 "naive_topology"}
+DEFAULT_ROOTS = ("src", "benchmarks")
+# the shim implementation itself (defines/forwards the legacy names)
+EXEMPT = {pathlib.Path("src/repro/experiments/runner.py")}
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def check_file(path: pathlib.Path) -> list:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:  # let the real linters report syntax errors
+        print(f"warning: {path}: unparseable ({e})", file=sys.stderr)
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _call_name(node) not in TARGET_CALLS:
+            continue
+        bad = sorted(kw.arg for kw in node.keywords
+                     if kw.arg in LEGACY_KWARGS)
+        if bad:
+            out.append((path, node.lineno, _call_name(node), bad))
+    return out
+
+
+def main(argv=None) -> int:
+    roots = [pathlib.Path(r) for r in (argv or sys.argv[1:])] or \
+            [pathlib.Path(r) for r in DEFAULT_ROOTS]
+    violations = []
+    for root in roots:
+        for path in sorted(root.rglob("*.py")):
+            if path in EXEMPT:
+                continue
+            violations.extend(check_file(path))
+    for path, line, fn, bad in violations:
+        print(f"{path}:{line}: {fn}() uses deprecated legacy kwarg(s) "
+              f"{', '.join(bad)} — pass overrides=SimOverrides(...) "
+              "instead (docs/experiments.md)")
+    if violations:
+        return 1
+    print(f"legacy-kwarg guard: clean "
+          f"({', '.join(str(r) for r in roots)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

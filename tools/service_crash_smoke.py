@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Crash-recovery smoke: SIGKILL a live daemon, restart it, and assert the
+recovered final artifact is byte-identical to an uninterrupted reference.
+
+    python tools/service_crash_smoke.py [--workdir DIR] [--n-specs 20]
+        [--overrides '{"contention": "fair-share"}']
+
+Protocol (the CI service-smoke job runs exactly this):
+
+1. Drop N job specs into an inbox.
+2. Run the daemon to completion over a COPY of that inbox -> reference
+   ``artifact.json`` digest.
+3. Start a fresh daemon (throttled so simulated time is observable from
+   outside), wait until its journal shows at least one snapshot AND all
+   submits, then ``SIGKILL`` it mid-run.
+4. Restart against the same state dir with ``--exit-when-idle``; recovery
+   replays the journal onto the snapshot and drains.
+5. Compare digests.  On mismatch, exit 1 (CI uploads the journal).
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+MODELS = ["yi-9b", "qwen3-1.7b", "qwen2-moe-a2.7b", "recurrentgemma-2b",
+          "minicpm3-4b", "qwen3-moe-30b-a3b"]
+
+
+def make_specs(n: int) -> list:
+    """A deterministic mixed workload: arrivals spread over simulated
+    hours so the daemon is mid-schedule (not drained) when killed."""
+    specs = []
+    for i in range(n):
+        specs.append({
+            "name": f"smoke-{i:03d}",
+            "model": MODELS[i % len(MODELS)],
+            "n_gpus": [1, 2, 4, 8, 2, 16][i % 6],
+            "gpu_hours": 0.3 + (i % 5) * 0.5,
+            "arrival": i * 400.0,
+        })
+    return specs
+
+
+def fill_inbox(inbox: pathlib.Path, specs) -> None:
+    inbox.mkdir(parents=True, exist_ok=True)
+    for s in specs:
+        (inbox / f"{s['name']}.json").write_text(json.dumps(s))
+
+
+def daemon_cmd(state_dir, inbox, overrides, *extra) -> list:
+    cmd = [sys.executable, "-m", "repro.service",
+           "--state-dir", str(state_dir), "--inbox", str(inbox),
+           "--scenario", "smoke", "--events-per-tick", "5",
+           "--snapshot-every", "25", "--tick-sleep", "0.01"]
+    if overrides:
+        cmd += ["--overrides", json.dumps(overrides)]
+    return cmd + list(extra)
+
+
+def env() -> dict:
+    e = dict(os.environ)
+    e["PYTHONPATH"] = str(REPO / "src") + os.pathsep + e.get("PYTHONPATH", "")
+    e.setdefault("JAX_PLATFORMS", "cpu")
+    e.pop("XLA_FLAGS", None)
+    return e
+
+
+def digest(path: pathlib.Path) -> str:
+    return hashlib.sha256(path.read_bytes()).hexdigest()
+
+
+def journal_counts(journal: pathlib.Path) -> dict:
+    counts = {"submit": 0, "snapshot": 0, "event": 0}
+    if journal.exists():
+        for line in journal.read_text().splitlines():
+            try:
+                t = json.loads(line).get("type")
+            except json.JSONDecodeError:
+                continue
+            counts[t] = counts.get(t, 0) + 1
+    return counts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--n-specs", type=int, default=20)
+    ap.add_argument("--overrides", default='{"contention": "fair-share"}')
+    ap.add_argument("--kill-timeout", type=float, default=120.0)
+    args = ap.parse_args(argv)
+
+    work = pathlib.Path(args.workdir or tempfile.mkdtemp(prefix="svc-smoke-"))
+    work.mkdir(parents=True, exist_ok=True)
+    overrides = json.loads(args.overrides) if args.overrides else None
+    specs = make_specs(args.n_specs)
+
+    # 1+2: uninterrupted reference
+    ref_inbox, ref_state = work / "ref-inbox", work / "ref-state"
+    fill_inbox(ref_inbox, specs)
+    subprocess.run(daemon_cmd(ref_state, ref_inbox, overrides,
+                              "--exit-when-idle"),
+                   check=True, env=env(), cwd=REPO, timeout=600)
+    ref = digest(ref_state / "artifact.json")
+    print(f"reference digest: {ref}")
+
+    # 3: throttled daemon, killed mid-run
+    inbox, state = work / "inbox", work / "state"
+    fill_inbox(inbox, specs)
+    proc = subprocess.Popen(
+        daemon_cmd(state, inbox, overrides, "--throttle", "0.05"),
+        env=env(), cwd=REPO)
+    journal = state / "journal.jsonl"
+    deadline = time.time() + args.kill_timeout
+    try:
+        while time.time() < deadline:
+            c = journal_counts(journal)
+            if c["snapshot"] >= 1 and c["submit"] == args.n_specs:
+                break
+            if proc.poll() is not None:
+                print("FAIL: daemon exited before it could be killed "
+                      f"(rc={proc.returncode}); journal={c}")
+                return 1
+            time.sleep(0.1)
+        else:
+            print(f"FAIL: no snapshot within {args.kill_timeout}s; "
+                  f"journal={journal_counts(journal)}")
+            return 1
+        proc.send_signal(signal.SIGKILL)
+    finally:
+        if proc.poll() is None and not proc.returncode:
+            proc.kill()
+        proc.wait()
+    c = journal_counts(journal)
+    print(f"killed daemon mid-run; journal at kill: {c}")
+
+    # 4: recover and drain
+    subprocess.run(daemon_cmd(state, inbox, overrides, "--exit-when-idle"),
+                   check=True, env=env(), cwd=REPO, timeout=600)
+    rec = digest(state / "artifact.json")
+    print(f"recovered digest: {rec}")
+
+    # 5: byte-identity
+    if rec != ref:
+        print("FAIL: recovered artifact != uninterrupted reference")
+        return 1
+    print("OK: crash-recovered artifact is byte-identical to the "
+          "uninterrupted reference")
+    if args.workdir is None:
+        shutil.rmtree(work, ignore_errors=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
