@@ -97,11 +97,26 @@ def _time_failures_small() -> float:
     return time.perf_counter() - t0
 
 
+def _time_dally_dc() -> float:
+    # dally-dominated datacenter cell: a deep wait queue re-offered every
+    # round under auto-tuned delay timers, with preemption and
+    # consolidation upgrades — the hot loop the offer-hold / dirty-tail /
+    # incremental-index work flattened.  Guards exactly those paths: a
+    # regression in the held-offer fast path or the victim indices shows
+    # up here long before the (shorter) fig14 smoke cells notice.
+    from repro.experiments import SimOverrides, run_one
+    t0 = time.perf_counter()
+    run_one("dc-256", policy="dally", seed=0,
+            overrides=SimOverrides(n_jobs=1500))
+    return time.perf_counter() - t0
+
+
 BENCHMARKS = {
     "fig7_small": _time_fig7_small,
     "smoke_sweep": _time_smoke_sweep,
     "fig14_small": _time_fig14_small,
     "failures_small": _time_failures_small,
+    "dally_dc_small": _time_dally_dc,
 }
 
 

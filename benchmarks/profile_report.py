@@ -1,0 +1,89 @@
+"""Per-phase wall-clock profile of one simulation cell.
+
+Runs a (scenario, policy, seed) cell with the simulator's opt-in phase
+counters enabled (``sim.profile``) and prints where the wall clock went:
+scheduling rounds, offer passes, preemption scans, fabric re-pricing,
+tuner queries, and the Dally policy's upgrade / rack-yield scans.  This
+is the measurement tool behind the hot-loop work — rerun it before
+claiming any scheduling-path optimisation.
+
+    python -m benchmarks.profile_report                  # dc-256, dally
+    python -m benchmarks.profile_report --scenario dc-1024 --n-jobs 2000
+    python -m benchmarks.profile_report --small          # CI smoke
+
+Writes benchmarks/artifacts/profile_report.json.  The counters are
+timers only: enabling them never changes a schedule (pinned by
+tests/test_hotloop_identity.py).
+"""
+from __future__ import annotations
+
+import argparse
+from time import perf_counter
+
+from .common import archs, row, save  # noqa: F401  (fixes sys.path first)
+
+from repro.core.profile import SimProfile  # noqa: E402
+from repro.experiments import get_scenario  # noqa: E402
+
+
+def profile_cell(scenario: str, policy: str, seed: int = 0,
+                 n_jobs=None, n_racks=None) -> dict:
+    sc = get_scenario(scenario)
+    overrides = {k: v for k, v in
+                 (("n_jobs", n_jobs), ("n_racks", n_racks))
+                 if v is not None}
+    if overrides:
+        sc = sc.with_overrides(**overrides)
+    sim = sc.build_sim(archs(), policy=policy, seed=seed)
+    sim.profile = SimProfile()
+    t0 = perf_counter()
+    res = sim.run()
+    wall = perf_counter() - t0
+    phases = res["profile"]
+    accounted = sum(v["wall_s"] for v in phases.values())
+    return {
+        "scenario": sc.name,
+        "policy": policy,
+        "seed": seed,
+        "n_jobs": sc.n_jobs,
+        "n_machines": sc.n_racks * sc.machines_per_rack,
+        "wall_s": round(wall, 3),
+        "accounted_s": round(accounted, 3),
+        "n_finished": res["n_finished"],
+        "phases": {
+            name: {"calls": v["calls"], "wall_s": round(v["wall_s"], 4)}
+            for name, v in phases.items()
+        },
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", default="dc-256")
+    ap.add_argument("--policy", default="dally")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-jobs", type=int, default=2000)
+    ap.add_argument("--n-racks", type=int, default=None)
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke: 64-machine dc-256 cell, 200 jobs")
+    args = ap.parse_args(argv)
+    if args.small:
+        args.scenario, args.n_jobs, args.n_racks = "dc-256", 200, 8
+
+    out = profile_cell(args.scenario, args.policy, seed=args.seed,
+                       n_jobs=args.n_jobs, n_racks=args.n_racks)
+    print(f"# {out['scenario']} / {out['policy']} / seed {out['seed']}: "
+          f"{out['n_jobs']} jobs on {out['n_machines']} machines, "
+          f"{out['wall_s']:.2f}s wall ({out['accounted_s']:.2f}s in "
+          f"profiled phases)")
+    for name, v in sorted(out["phases"].items(),
+                          key=lambda kv: -kv[1]["wall_s"]):
+        pct = 100.0 * v["wall_s"] / max(out["wall_s"], 1e-9)
+        row(f"profile.{out['scenario']}.{out['policy']}.{name}.wall_seconds",
+            round(v["wall_s"], 3), f"{v['calls']} calls, {pct:.1f}% of wall")
+    save("profile_report", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

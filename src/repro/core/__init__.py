@@ -16,6 +16,9 @@ Components (paper §IV):
   trace       — batch + Poisson workload generators (SenseTime-like stats)
                 + machine failure/maintenance schedules (MTBF/MTTR churn)
   metrics     — makespan / JCT / queueing delay / communication latency
+  profile     — opt-in per-phase wall-clock counters for the scheduling
+                hot loop (``sim.profile = SimProfile()``); never affects
+                a schedule
 """
 from .autotuner import AutoTuner  # noqa: F401
 from .commmodel import CommModel  # noqa: F401
@@ -23,6 +26,7 @@ from .fabric import FairShareFabric  # noqa: F401
 from .job import Job  # noqa: F401
 from .metrics import summarize  # noqa: F401
 from .parallelism import ParallelPlan, plan_for, pure_dp_plan  # noqa: F401
+from .profile import SimProfile  # noqa: F401
 from .simulator import ClusterSimulator  # noqa: F401
 from .topology import (  # noqa: F401
     ClusterTopology,

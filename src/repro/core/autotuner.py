@@ -30,14 +30,40 @@ from collections import defaultdict, deque
 from typing import Dict, Optional, Tuple
 
 
+def _bucket() -> Tuple[deque, deque]:
+    """Demand-bucket factory: parallel (observed_at, wait_time) deques.
+    Splitting the old deque-of-pairs lets the aggregation paths consume
+    the wait column wholesale (``extend`` / ``list``) instead of
+    destructuring a tuple per entry — the tuner's former hot loop.  A
+    module-level function (not a lambda) keeps the defaultdict picklable
+    for service snapshots."""
+    return (deque(), deque())
+
+
 class AutoTuner:
     def __init__(self, history_time_limit: float = 7 * 24 * 3600.0,
                  default_machine: float = 12 * 3600.0,
                  default_rack: float = 12 * 3600.0):
         self.history_time_limit = history_time_limit
         self.default = {"machine": default_machine, "rack": default_rack}
-        # (tier, g) -> deque of (observed_at, wait_time)
-        self.lists: Dict[Tuple[str, int], deque] = defaultdict(deque)
+        # monotone observation counter: bumps on every recorded wait.
+        # Policies memoize schedule-affecting timer reads on
+        # (now, version) — timer values can only change when `now` moves
+        # or an observation lands, so an equal stamp proves the repeat
+        # call would return the same value AND mutate nothing new (the
+        # first call at this stamp already created/pruned the buckets).
+        self.version = 0
+        # fine-grained observation stamps, the dependency half of offer
+        # holds: a timer served from bucket (tier, g) can only change on
+        # an observation for that same (tier, g); one served through the
+        # tier aggregate (or the cold default) on any same-tier
+        # observation.  Both are exactly what update_demand_delay
+        # invalidates below.
+        self._obs_version: Dict[Tuple[str, int], int] = {}
+        self._agg_version: Dict[str, int] = {}
+        # (tier, g) -> parallel (times, waits) deques
+        self.lists: Dict[Tuple[str, int],
+                         Tuple[deque, deque]] = defaultdict(_bucket)
         # (tier, g) -> (valid_until, timer | None); None = bucket empty,
         # resolve through the tier aggregate
         self._bucket_cache: Dict[Tuple[str, int],
@@ -50,20 +76,31 @@ class AutoTuner:
                             now: float):
         """Paper Algo 1 lines 7/15: record the starvation time that preceded
         an accepted offer at this consolidation tier."""
-        self.lists[(tier, g)].append((now, wait_time))
+        tdq, wdq = self.lists[(tier, g)]
+        tdq.append(now)
+        wdq.append(wait_time)
+        self.version += 1
+        self._obs_version[(tier, g)] = self._obs_version.get((tier, g),
+                                                             0) + 1
+        self._agg_version[tier] = self._agg_version.get(tier, 0) + 1
         # targeted invalidation: only this bucket's memo and this tier's
         # aggregate can change — other demands' exact-bucket values cannot
         self._bucket_cache.pop((tier, g), None)
         self._agg_cache.pop(tier, None)
 
-    def _prune(self, dq: deque, now: float):
-        while dq and now - dq[0][0] > self.history_time_limit:
-            dq.popleft()
+    def _prune(self, bucket: Tuple[deque, deque], now: float):
+        tdq, wdq = bucket
+        limit = self.history_time_limit
+        while tdq and now - tdq[0] > limit:
+            tdq.popleft()
+            wdq.popleft()
 
     @staticmethod
     def _mean_plus_2std(xs) -> float:
         mean = sum(xs) / len(xs)
-        var = sum((x - mean) ** 2 for x in xs) / max(len(xs) - 1, 1)
+        # listcomp, not genexpr: sum() over a materialized list skips the
+        # generator frame per element — same floats in the same order
+        var = sum([(x - mean) ** 2 for x in xs]) / max(len(xs) - 1, 1)
         return mean + 2.0 * math.sqrt(var)
 
     def _tier_aggregate(self, tier: str, now: float) -> Optional[float]:
@@ -75,14 +112,15 @@ class AutoTuner:
             return hit[1]
         xs: list = []
         valid_until = math.inf
-        for (t2, _), dq in list(self.lists.items()):
-            if t2 != tier or not dq:
+        for (t2, _), bucket in list(self.lists.items()):
+            if t2 != tier or not bucket[0]:
                 continue
-            self._prune(dq, now)
-            if dq:
+            self._prune(bucket, now)
+            tdq, wdq = bucket
+            if tdq:
                 valid_until = min(valid_until,
-                                  dq[0][0] + self.history_time_limit)
-                xs.extend(w for _, w in dq)
+                                  tdq[0] + self.history_time_limit)
+                xs.extend(wdq)
         val = self._mean_plus_2std(xs) if xs else None
         self._agg_cache[tier] = (valid_until, val)
         return val
@@ -92,26 +130,52 @@ class AutoTuner:
         demands (rare demands would otherwise sit on the cold-start
         default forever — they only record on acceptance *at* that tier)
         -> configured default."""
+        return self.timer_and_horizon(tier, g, now)[0]
+
+    def timer_and_horizon(self, tier: str, g: int, now: float
+                          ) -> Tuple[float, float, tuple]:
+        """``(timer, valid_until, dep)``: the timer plus the two halves
+        of its freshness guarantee — the last instant the value is
+        unchanged absent new observations (aging bound), and a
+        dependency stamp ``(version_dict, key, seen)`` that moves exactly
+        when an observation lands that can change THIS value (same
+        (tier, g) for a bucket-served timer, same tier for an
+        aggregate- or default-served one).  This is what lets the
+        scheduler hold a timer-based offer rejection without re-querying:
+        the rejection stands while ``now <= valid_until``, the stamp
+        still matches, and the job's starvation is still below the
+        returned value."""
         key = (tier, g)
         hit = self._bucket_cache.get(key)
         if hit is not None and now <= hit[0]:
-            val = hit[1]
+            valid_until, val = hit
         else:
-            dq = self.lists[key]
-            self._prune(dq, now)
-            if dq:
-                val = self._mean_plus_2std([w for _, w in dq])
-                self._bucket_cache[key] = (
-                    dq[0][0] + self.history_time_limit, val)
+            bucket = self.lists[key]
+            self._prune(bucket, now)
+            tdq, wdq = bucket
+            if tdq:
+                val = self._mean_plus_2std(list(wdq))
+                valid_until = tdq[0] + self.history_time_limit
             else:
                 # an empty bucket stays empty until an update (which
                 # invalidates), so the miss result never expires
-                val = None
-                self._bucket_cache[key] = (math.inf, None)
+                val, valid_until = None, math.inf
+            self._bucket_cache[key] = (valid_until, val)
         if val is not None:
-            return val
-        agg = self._tier_aggregate(tier, now)
-        return agg if agg is not None else self.default[tier]
+            return val, valid_until, (
+                self._obs_version, key, self._obs_version.get(key, 0))
+        agg_val = self._tier_aggregate(tier, now)
+        # _tier_aggregate just (re)filled its cache entry; its horizon is
+        # the earliest expiry among the contributing buckets (+inf when
+        # the tier has nothing fresh — only an update can change that).
+        # An empty bucket can only stop resolving here via an update for
+        # its own (tier, g), which bumps the tier stamp too — so the
+        # tier-level dep covers the default path as well.
+        agg_valid_until = self._agg_cache[tier][0]
+        dep = (self._agg_version, tier, self._agg_version.get(tier, 0))
+        if agg_val is not None:
+            return agg_val, agg_valid_until, dep
+        return self.default[tier], agg_valid_until, dep
 
     def get_tuned_timers(self, g: int, now: float) -> Tuple[float, float]:
         """Returns (T_machine, T_rack) = mean + 2*stddev per tier."""
@@ -126,17 +190,17 @@ class AutoTuner:
         ``self.lists`` bucket changes the dict's insertion order, which
         changes the float-summation order inside ``_tier_aggregate``), so
         observing a running daemon must never call it."""
-        dq = self.lists.get((tier, g))
-        if dq:
-            fresh = [w for t, w in dq
+        bucket = self.lists.get((tier, g))
+        if bucket and bucket[0]:
+            fresh = [w for t, w in zip(bucket[0], bucket[1])
                      if now - t <= self.history_time_limit]
             if fresh:
                 return self._mean_plus_2std(fresh)
         xs: list = []
-        for (t2, _), bucket in self.lists.items():
+        for (t2, _), (tdq, wdq) in self.lists.items():
             if t2 != tier:
                 continue
-            xs.extend(w for t, w in bucket
+            xs.extend(w for t, w in zip(tdq, wdq)
                       if now - t <= self.history_time_limit)
         if xs:
             return self._mean_plus_2std(xs)

@@ -52,6 +52,18 @@ class FairShareFabric:
         self.spine_bw = spine_bw if spine_bw is not None else cluster.spine_bw
         if self.spine_bw is None:
             self.spine_bw = DEFAULT_SPINE_X * nic_bw
+        # Incremental membership state (the simulator's hot path): per
+        # link an insertion-ordered {job_id: weight} map.  The running
+        # list only ever gains members by append (``_start``), and a
+        # removal preserves the order of the rest in dict and list alike,
+        # so each map's iteration order IS the running-list order of that
+        # link's users — which makes the per-link load re-sum below
+        # bit-identical to the from-scratch path in :meth:`fair_shares`
+        # (same floats, same left-to-right addition order).
+        self._members: Dict[tuple, Dict[int, float]] = {}
+        self._links_of: Dict[int, tuple] = {}
+        self._loads: Dict[tuple, float] = {}
+        self._dirty: set = set()
 
     def _capacity(self, link) -> float:
         return self.spine_bw if link == self.cluster.SPINE \
@@ -90,3 +102,99 @@ class FairShareFabric:
                          for link in links))
             for jid, links in links_of.items()
         }
+
+    # -- incremental membership (simulator hot path) ---------------------
+    # The simulator registers every network-tier placement as it starts
+    # and unregisters it as it tears down; a re-price then only re-solves
+    # the links whose membership actually changed and re-prices only
+    # their members, instead of recomputing the whole network-tier fleet.
+    # ``fair_shares`` above is retained as the reference recompute path —
+    # the differential suite pins ``share_of`` bit-identical to it.
+
+    def add_placement(self, job) -> bool:
+        """Register a newly started cross-rack job.  Returns True when the
+        placement loads any fabric link (i.e. a re-price is due)."""
+        links = self.cluster.placement_links(job.placement)
+        if not links:
+            return False
+        w = 1.0 if job.plan is None else job.plan.fabric_weight
+        self._links_of[job.job_id] = links
+        for link in links:
+            self._members.setdefault(link, {})[job.job_id] = w
+            self._dirty.add(link)
+        return True
+
+    def remove_placement(self, job) -> bool:
+        """Unregister a job whose placement is being torn down.  Returns
+        True when it was loading any link."""
+        links = self._links_of.pop(job.job_id, None)
+        if not links:
+            return False
+        for link in links:
+            members = self._members[link]
+            del members[job.job_id]
+            if members:
+                self._dirty.add(link)
+            else:
+                # nobody left to re-price through this link
+                del self._members[link]
+                self._loads.pop(link, None)
+                self._dirty.discard(link)
+        return True
+
+    def take_affected(self) -> set:
+        """Job-ids whose fair share may have changed since the last call:
+        the current members of every link whose membership changed.  Each
+        dirty link's load is re-summed sequentially in insertion (=
+        running-list) order, keeping the value bit-identical to the
+        recompute path; untouched links keep their cached loads (same
+        members => same sum)."""
+        affected: set = set()
+        loads = self._loads
+        for link in self._dirty:
+            members = self._members.get(link)
+            if not members:
+                continue
+            load = 0.0
+            for w in members.values():
+                load += w
+            loads[link] = load
+            affected.update(members)
+        self._dirty.clear()
+        return affected
+
+    def share_of(self, job_id: int) -> float:
+        """The registered job's effective inter-node bandwidth, from the
+        incrementally maintained link loads (call after
+        :meth:`take_affected` has drained the dirty set)."""
+        loads = self._loads
+        return min(self.nic_bw,
+                   min(self._capacity(link) / loads[link]
+                       for link in self._links_of[job_id]))
+
+    def debug_assert_synced(self, jobs: Iterable) -> None:
+        """Test/probe seam: assert the incremental membership state equals
+        a from-scratch recompute over ``jobs`` — same links, same member
+        order, and bit-identical loads for every clean link."""
+        members: Dict[tuple, Dict[int, float]] = {}
+        links_of: Dict[int, tuple] = {}
+        for job in jobs:
+            if getattr(job, "placement_tier", None) not in (None, "network"):
+                continue
+            links = self.cluster.placement_links(job.placement)
+            if not links:
+                continue
+            links_of[job.job_id] = links
+            w = 1.0 if job.plan is None else job.plan.fabric_weight
+            for link in links:
+                members.setdefault(link, {})[job.job_id] = w
+        assert self._links_of == links_of, (self._links_of, links_of)
+        assert set(self._members) == set(members)
+        for link, want in members.items():
+            assert list(self._members[link].items()) == list(want.items()), \
+                (link, self._members[link], want)
+            if link not in self._dirty:
+                load = 0.0
+                for w in want.values():
+                    load += w
+                assert self._loads[link] == load, (link, load)

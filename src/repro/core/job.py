@@ -10,10 +10,15 @@ Low Nw_sens => the job suffered network-induced slowdowns => offer first.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import List, Optional
 
 from .parallelism import ParallelPlan
 from .topology import Placement
+
+try:  # optional: the batch scorers fall back to the scalar path without it
+    import numpy as _np
+except ImportError:  # pragma: no cover - numpy ships with the toolchain
+    _np = None
 
 
 @dataclass(eq=False)  # identity equality: O(1) list removal in the simulator
@@ -90,3 +95,60 @@ class Job:
         if ref is None:
             ref = self.arrival
         return max(now - ref, 0.0)
+
+
+# -- vectorized batch scorers (simulator/policy hot loops) -------------------
+# Bit-identical to the scalar methods above: every step is an elementwise
+# IEEE-754 float64 operation (+, -, *, /, maximum, minimum, floor, where)
+# applied in the same order as the scalar code, and numpy's elementwise
+# float64 arithmetic matches CPython's float arithmetic operation for
+# operation.  No reductions (numpy's pairwise sums would NOT match) —
+# the differential tests pin the equality per element.
+
+
+def _live_many(jobs: List[Job], now: float):
+    """Batch twin of ``Job._live``: (t_run, iters_done) float64 arrays
+    including the in-flight run segment, or None when numpy is missing."""
+    if _np is None:
+        return None
+    n = len(jobs)
+    t_run = _np.fromiter((j.t_run for j in jobs), _np.float64, n)
+    iters = _np.fromiter((j.iters_done for j in jobs), _np.float64, n)
+    run_start = _np.fromiter((j.run_start for j in jobs), _np.float64, n)
+    iter_time = _np.fromiter((j.iter_time for j in jobs), _np.float64, n)
+    total = _np.fromiter((j.total_iters for j in jobs), _np.float64, n)
+    placed = _np.fromiter((j.placement is not None for j in jobs),
+                          _np.bool_, n)
+    # el == 0.0 where inactive: t_run + 0.0 and iters + 0.0 are exact
+    # no-ops (t_run/iters are never -0.0), matching the scalar branch skip
+    el = _np.where(placed & (now > run_start), now - run_start, 0.0)
+    inc = _np.floor(el / _np.maximum(iter_time, 1e-9))
+    # int counts stay far below 2**53 wherever min() doesn't clamp to
+    # total_iters, so the float adds here are exact like the scalar ints
+    return t_run + el, _np.minimum(iters + inc, total), total
+
+
+def nw_sens_many(jobs: List[Job], now: float):
+    """Batch ``Job.nw_sens``: a float64 array of bit-identical values, or
+    None when numpy is unavailable."""
+    live = _live_many(jobs, now)
+    if live is None:
+        return None
+    t_run, iters, total = live
+    n = len(jobs)
+    ctpi = _np.fromiter((j.compute_time_per_iter for j in jobs),
+                        _np.float64, n)
+    w_compl = iters / _np.maximum(total, 1.0)
+    t_norm = t_run / _np.maximum(ctpi * total, 1e-9)
+    out = w_compl / _np.maximum(t_norm, 1e-12)
+    return _np.where(t_run <= 0.0, 0.0, out)
+
+
+def two_das_many(jobs: List[Job], now: float):
+    """Batch ``Job.two_das``: bit-identical values, or None sans numpy."""
+    live = _live_many(jobs, now)
+    if live is None:
+        return None
+    t_run = live[0]
+    n_gpus = _np.fromiter((j.n_gpus for j in jobs), _np.float64, len(jobs))
+    return t_run * n_gpus

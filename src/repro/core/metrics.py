@@ -2,16 +2,26 @@
 communication latency, plus utilization / jobs-remaining timelines."""
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List
 
 
 def _pct(xs: List[float], p: float) -> float:
+    """Nearest-rank percentile: the smallest sample value with at least
+    p% of the sample at or below it, i.e. index ceil(p*n/100) - 1.
+
+    The old floor index ``int(p/100 * n)`` overshot by one whenever p*n
+    divided evenly (a 20-sample p95 returned the maximum instead of the
+    19th value).  ``p * n`` is computed BEFORE the division so the
+    integral quotients stay exact — ``0.95 * 20`` is already
+    19.000000000000004 in floats, and ceiling that would rebuild the
+    same off-by-one."""
     if not xs:
         return 0.0
     xs = sorted(xs)
-    k = min(int(p / 100.0 * len(xs)), len(xs) - 1)
-    return xs[k]
+    k = max(math.ceil(p * len(xs) / 100.0) - 1, 0)
+    return xs[min(k, len(xs) - 1)]
 
 
 def _stats(xs: List[float]) -> Dict[str, float]:

@@ -27,6 +27,7 @@ routes through the exact pure-DP code path, bit-for-bit.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Optional, Tuple
 
 GRAD_DTYPE_BYTES = 2  # bf16 gradients, matching CommModel's default
@@ -93,11 +94,14 @@ class ParallelPlan:
         w = sum(self.internode_components()) / ref
         return min(max(w, 0.05), 4.0)
 
+    @lru_cache(maxsize=None)
     def delay_scales(self) -> Tuple[float, float]:
         """(machine_scale, rack_scale): multipliers for Dally's delay
         timers — how much each consolidation tier is worth waiting for,
         given the plan's traffic mix.  Pure DP = (1.0, 1.0), today's
-        behaviour exactly.
+        behaviour exactly.  Memoized (the plan is frozen and the offer
+        pass queries it once per waiting job per round): lru_cache keyed
+        on the hashable plan keeps equal plans deduped too.
 
         The machine scale weighs everything that profits from intra-
         machine bandwidth: TP activations (which *spill* to the worst

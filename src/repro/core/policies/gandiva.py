@@ -36,6 +36,14 @@ class GandivaPolicy(Policy):
         # right now, counting its own GPUs as free?), and machine-tier jobs
         # can never upgrade, so only the scattered minority is scanned
         order = {"machine": 0, "rack": 1, "network": 2}
+        # With zero free GPUs no scattered job can upgrade: a rack- or
+        # network-tier placement spans >= 2 machines (so each machine's
+        # own-share contribution is < n_gpus) and a network placement
+        # spans >= 2 racks, so every upgrade probe needs at least one
+        # free GPU somewhere to beat the current tier.  Skipping the
+        # probes is decision-identical — they would all return None.
+        if sim.cluster.free_gpus() == 0:
+            return
         best = None
         for job in sim.running_scattered:
             target = sim.upgrade_level(job)

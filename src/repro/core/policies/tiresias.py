@@ -9,7 +9,13 @@
 """
 from __future__ import annotations
 
+from ..job import two_das_many
 from .base import Policy
+
+try:
+    import numpy as _np
+except ImportError:  # pragma: no cover - numpy ships with the toolchain
+    _np = None
 
 
 class TiresiasPolicy(Policy):
@@ -31,6 +37,20 @@ class TiresiasPolicy(Policy):
                 level += 1
         # MLFQ: level first, then FIFO (arrival) within the level
         return level * 1e12 + job.arrival
+
+    def priority_many(self, jobs, now):
+        das = two_das_many(jobs, now)
+        if das is None:
+            return None
+        # level is a small exact integer (<= len(thresholds)), so the
+        # float accumulation and level * 1e12 are exact, and the final
+        # add matches the scalar int-level * 1e12 + arrival bit for bit
+        level = _np.zeros(len(jobs), _np.float64)
+        for th in self.queue_thresholds:
+            level += das > th
+        arrivals = _np.fromiter((j.arrival for j in jobs),
+                                _np.float64, len(jobs))
+        return level * 1e12 + arrivals
 
     def on_offer(self, job, sim, now):
         cl = sim.cluster

@@ -25,7 +25,10 @@ class DallyManualPolicy(DallyPolicy):
             t_mc = 0.0
         if job.n_gpus > sim.cluster.max_rack_capacity:
             t_rk = 0.0
-        return t_mc, t_rk
+        # fixed timers never age and have no tuner dependency: offer
+        # holds stay valid until the live capacity checks unblock or
+        # starvation crosses the fixed timer
+        return t_mc, t_rk, (_INF, None), (_INF, None)
 
     def record_acceptance(self, job, tier, now):
         return  # no tuning

@@ -57,17 +57,29 @@ import heapq
 import pickle
 from bisect import insort
 from operator import attrgetter
+from time import perf_counter
 from typing import Callable, Dict, List, Optional
 
 from .commmodel import CommModel
 from .fabric import FairShareFabric
 from .job import Job
 from .metrics import Timeline
+from .profile import SimProfile
 from .topology import ClusterTopology
+
+try:  # optional: the vectorized victim scan falls back to the scalar one
+    import numpy as _np
+except ImportError:  # pragma: no cover - numpy ships with the toolchain
+    _np = None
 
 ARRIVAL, ROUND, COMPLETE, SLOWDOWN, FAIL, RECOVER = 0, 1, 2, 3, 4, 5
 
 _WAIT_KEY = attrgetter("_wait_key")
+
+# below this many running jobs the scalar preemption scan beats numpy's
+# array-construction overhead; a pure performance knob — both paths are
+# bit-identical (the differential suite forces and compares each)
+_VEC_MIN_VICTIMS = 128
 
 
 class ClusterSimulator:
@@ -79,7 +91,8 @@ class ClusterSimulator:
                  slowdown_events: Optional[List] = None,
                  failure_events: Optional[List] = None,
                  fabric: Optional[FairShareFabric] = None,
-                 event_hook: Optional[Callable] = None):
+                 event_hook: Optional[Callable] = None,
+                 profile: bool = False):
         self.cluster = cluster
         self.policy = policy
         self.comm = comm
@@ -105,12 +118,25 @@ class ClusterSimulator:
         self._began = False  # begin() called (service-mode round chain)
         self._fabric_dirty = False
         self.n_reprices = 0
+        # opt-in per-phase wall-time/call counters (see repro.core.profile):
+        # None (the default) keeps the hot loop at one `is None` check per
+        # phase and results() byte-identical to the legacy schemas
+        self.profile: Optional[SimProfile] = SimProfile() if profile else None
+        # set when the run wedged: jobs still waiting but provably nothing
+        # can ever run again (see _wedged_now) — surfaced in results()
+        self.wedged = False
 
         self.clock = 0.0
         self.events: List = []
         self._seq = 0
         self.waiting: List[Job] = []
         self._waiting_dirty = False
+        # jobs appended (unsorted) while the queue was dirty — preemption
+        # victims and same-instant arrivals.  They are contiguous at the
+        # tail of `waiting` (appends go to the end, removals keep relative
+        # order), so the next round restores sorted order by merging this
+        # short tail instead of re-sorting the whole queue
+        self._dirty_tail: List[Job] = []
         self.running: List[Job] = []
         # running jobs on a rack-/network-tier placement — the only
         # upgrade/migration candidates; maintained incrementally so the
@@ -148,8 +174,13 @@ class ClusterSimulator:
         # fails the next at the identical timestamp): react once, after
         # the last notice, not once per machine
         self._churn_dirty = False
+        # pending RECOVER events: while any remain, capacity may still
+        # grow, so a starved-but-stuck queue is not yet a wedge
+        self._pending_recovers = 0
         for t, kind, machine in (failure_events or []):
             assert kind in ("fail", "recover"), kind
+            if kind == "recover":
+                self._pending_recovers += 1
             self._push(t, FAIL if kind == "fail" else RECOVER, machine)
         self._completion_version: Dict[int, int] = {}
         self._pending_arrivals = 0
@@ -193,13 +224,16 @@ class ClusterSimulator:
         stable re-sort because the key ends in the unique job_id.  A dirty
         queue (a preemption appended mid-round; the victim must stay at
         the tail so same-round re-offers reach it LAST, as they always
-        have) just appends — the next round's sort restores order."""
+        have) just appends — the next round merges the tail back in
+        (``_merge_dirty_tail``), order-identical to a full re-sort."""
+        job._offer_hold = None  # fresh wait spell: any prior hold is void
         if self.policy.waiting_priority_static:
             job._wait_key = (self.policy.priority(job, now), job.arrival,
                              job.job_id)
-            if tail:
+            if tail or self._waiting_dirty:
                 self._waiting_dirty = True
-            elif not self._waiting_dirty:
+                self._dirty_tail.append(job)
+            else:
                 insort(self.waiting, job, key=_WAIT_KEY)
                 return
         self.waiting.append(job)
@@ -211,17 +245,9 @@ class ClusterSimulator:
             f = max(f, self.machine_slowdown.get(m, 1.0))
         return f
 
-    def _touch_fabric(self, placement):
-        """Mark the fabric contending-set dirty if `placement` shares any
-        link (machine-/rack-tier placements never contend)."""
-        if (self.fabric is not None and not self._fabric_dirty
-                and self.cluster.placement_links(placement)):
-            self._fabric_dirty = True
-
     def _start(self, job: Job, level: str, now: float):
         placement = self.cluster.allocate(job.n_gpus, level)
         assert placement is not None, (job.job_id, level)
-        self._touch_fabric(placement)
         tier = placement.tier(self.cluster.machines_per_rack)
         self.policy.record_acceptance(job, tier, now)
         job.t_queue += now - job.wait_since
@@ -246,12 +272,20 @@ class ClusterSimulator:
         job.run_start = now + restore
         job.started_once = True
         job.last_assignment_time = now
+        self.wedged = False  # a placement is progress (service re-submits)
         self.running.append(job)
         if self._failures_enabled:
             for m, _ in placement.alloc:
                 self._jobs_on_machine.setdefault(m, {})[job.job_id] = job
         if tier != "machine":
             self.running_scattered.append(job)
+        # only cross-rack placements load fabric links: register with the
+        # fabric's incremental membership (a network tier is exactly a
+        # multi-rack placement, i.e. non-empty placement_links)
+        if self.fabric is not None and tier == "network":
+            if self.fabric.add_placement(job):
+                self._fabric_dirty = True
+        self.policy.note_place(job, self)
         self.waiting.remove(job)
         t_end = job.run_start + job.remaining_iters() * it
         v = self._completion_version.get(job.job_id, 0) + 1
@@ -284,8 +318,7 @@ class ClusterSimulator:
         machine-failure crash): fold progress, free the GPUs, invalidate
         the pending COMPLETE, and re-enqueue at the wait-queue tail."""
         self._progress(job, now)
-        self._touch_fabric(job.placement)
-        self._untrack(job)
+        self._teardown_placement(job)
         self.cluster.release(job.placement)
         if job.placement_tier != "machine":
             self.running_scattered.remove(job)
@@ -301,12 +334,19 @@ class ClusterSimulator:
         job.last_assignment_time = now
         self._enqueue(job, now, tail=True)
 
-    def _untrack(self, job: Job):
-        """Drop a job (whose placement is being torn down) from the
-        per-machine victim index."""
+    def _teardown_placement(self, job: Job):
+        """Shared index/fabric bookkeeping for a placement being torn down
+        (while ``job.placement`` is still set): drop the job from the
+        per-machine victim index, unregister it from the fabric's
+        incremental membership, and notify the policy's candidate
+        indices."""
         if self._failures_enabled:
             for m, _ in job.placement.alloc:
                 del self._jobs_on_machine[m][job.job_id]
+        if self.fabric is not None and job.placement_tier == "network":
+            if self.fabric.remove_placement(job):
+                self._fabric_dirty = True
+        self.policy.note_evict(job, self)
 
     def preempt(self, job: Job, now: float):
         self._evict(job, now)
@@ -360,26 +400,108 @@ class ClusterSimulator:
         if cur == "machine":
             return None
         g = job.n_gpus
-        alloc = job.placement.alloc
+        placement = job.placement
+        alloc = placement.alloc
         free = cl.free
-        if g <= cl.gpus_per_machine and (
-                cl.max_free_on_machine() >= g
-                or any(free[m] + c >= g for m, c in alloc)):
-            return "machine"
+        if g <= cl.gpus_per_machine:
+            mf = cl.max_free_on_machine()
+            # per-machine walk gated by its necessary condition
+            # (free[m] <= mf, so free[m] + c >= g needs mf + max_share
+            # >= g): when the gate fails the walk is all-False anyway
+            if mf >= g or (mf + placement.max_share >= g
+                           and any(free[m] + c >= g for m, c in alloc)):
+                return "machine"
         if cur == "network" and g <= cl.max_rack_capacity:
-            if cl.max_free_on_rack() >= g:
+            mfr = cl.max_free_on_rack()
+            if mfr >= g:
                 return "rack"
-            per_rack: Dict[int, int] = {}
-            for m, c in alloc:
-                r = m // cl.machines_per_rack
-                per_rack[r] = per_rack.get(r, 0) + c
-            if any(cl.rack_free(r) + d >= g for r, d in per_rack.items()):
+            per_rack, max_rack_share = placement.rack_shares(
+                cl.machines_per_rack)
+            # same necessary-condition gate (rack_free(r) <= mfr)
+            if (mfr + max_rack_share >= g
+                    and any(cl.rack_free(r) + d >= g
+                            for r, d in per_rack.items())):
                 return "rack"
         # "network" can always re-host the job's own GPUs — never an upgrade
         return None
 
+    def _preemption_victims(self, now: float, threshold: float, prio):
+        """Running jobs eligible for preemption, worst (highest priority
+        value) first.  The vectorized path scores the whole running set
+        in one numpy batch (``Policy.priority_many`` — bit-identical
+        elementwise IEEE ops) and stable-argsorts the negated scores,
+        which reproduces ``sorted(key=lambda j: -prio(j))`` exactly,
+        original-order tie-break included.  The scalar scan is retained
+        as the no-numpy fallback and as the reference the differential
+        suite pins the vector path against."""
+        min_rt = self.preemption_min_runtime
+        # runtime eligibility first — an attribute compare, much cheaper
+        # than a priority score, and in high-churn regimes it discards
+        # most of the running set before anything gets scored
+        elig = [j for j in self.running
+                if now - j.last_assignment_time > min_rt]
+        if len(elig) >= _VEC_MIN_VICTIMS:
+            prios = self.policy.priority_many(elig, now)
+            if prios is not None:
+                idx = _np.nonzero(prios > threshold)[0]
+                order = idx[_np.argsort(-prios[idx], kind="stable")]
+                return [elig[i] for i in order]
+        return sorted((j for j in elig if prio(j) > threshold),
+                      key=lambda j: -prio(j))
+
+    # ------------------------------------------------------------------
+    def _split_dirty_tail(self) -> int:
+        """Index of the first dirty-tail job in ``waiting``.  Tail jobs
+        are contiguous at the end: every dirty-window insert appended, and
+        removals preserve relative order, so no sorted-prefix job can sit
+        behind a tail job.  A tail job that was re-placed meanwhile simply
+        isn't in the list any more; one preempted *again* re-enters via
+        the tail append, never the prefix (insort is bypassed while
+        dirty), so membership-by-id is exact."""
+        w = self.waiting
+        tail_ids = {j.job_id for j in self._dirty_tail}
+        i = len(w)
+        while i and w[i - 1].job_id in tail_ids:
+            i -= 1
+        return i
+
+    def _merge_dirty_tail(self):
+        """Restore sorted order by insort-merging the short dirty tail
+        into the (still sorted) prefix.  Identical final order to
+        ``waiting.sort(key=_WAIT_KEY)``: the key ends in the unique
+        job_id, so it is a total order with exactly one sorted
+        arrangement — but the merge costs O(k log n) comparisons for k
+        tail jobs instead of n key extractions, which is what made deep
+        dally-cell queues quadratic across preemption-heavy stretches."""
+        w = self.waiting
+        i = self._split_dirty_tail()
+        tail = w[i:]
+        del w[i:]
+        tail.sort(key=_WAIT_KEY)
+        for job in tail:
+            insort(w, job, key=_WAIT_KEY)
+        self._dirty_tail.clear()
+        self._waiting_dirty = False
+
+    def _dirty_top(self) -> Job:
+        """``min(waiting, key=_WAIT_KEY)`` for a dirty queue without
+        scanning the deep sorted prefix: the prefix minimum is its head,
+        so only the short tail needs inspection.  Keys are unique, so
+        min's first-minimum tie rule cannot diverge."""
+        w = self.waiting
+        i = self._split_dirty_tail()
+        best = None
+        for job in w[i:]:
+            if best is None or job._wait_key < best._wait_key:
+                best = job
+        if i and (best is None or w[0]._wait_key < best._wait_key):
+            best = w[0]
+        return best
+
     # ------------------------------------------------------------------
     def _scheduling_round(self, now: float):
+        prof = self.profile
+        t_round = perf_counter() if prof is not None else 0.0
         self.policy.on_round(self, now)
         # priority(job, now) is stable within a round (fixed `now`; preempting
         # a job folds its in-flight progress into t_run, leaving the value at
@@ -400,8 +522,7 @@ class ClusterSimulator:
         # tail (C-level key extraction: keys live on the jobs)
         if self.policy.waiting_priority_static:
             if self._waiting_dirty:
-                self.waiting.sort(key=_WAIT_KEY)
-                self._waiting_dirty = False
+                self._merge_dirty_tail()
         else:
             self.waiting.sort(key=lambda j: (prio(j), j.arrival, j.job_id))
         made_progress = True
@@ -418,14 +539,54 @@ class ClusterSimulator:
             # timer updates from acceptances) re-arms the outer loop.
             free = self.cluster.free_gpus()
             if free > 0:
+                t_offer = perf_counter() if prof is not None else 0.0
+                # offer-hold fast path: a job whose last timer rejection
+                # is provably still in force is skipped without the full
+                # on_offer probe.  This is the INLINED twin of the
+                # reference predicate Policy.offer_held (the hold tuple
+                # is standardized there) — at datacenter scale it runs
+                # millions of times per simulation and the call frames
+                # alone (offer_held -> starvation -> max) were ~30% of
+                # the pass, so the checks live in the loop body.  Any
+                # change here must mirror Policy.offer_held exactly.
+                cl = self.cluster
+                rack_cap = cl.max_rack_capacity
+                on_offer = self.policy.on_offer
+                # capacity maxima only move when an allocation does —
+                # i.e. at _start below — so they are loop constants
+                # between placements, not per-job queries
+                mm = cl.max_free_on_machine()
+                mr = cl.max_free_on_rack()
                 for job in list(self.waiting):
-                    if job.n_gpus > free:
+                    g = job.n_gpus
+                    if g > free:
                         continue  # cannot fit at any tier: skip the probe
-                    level = self.policy.on_offer(job, self, now)
+                    hold = job._offer_hold
+                    if hold is not None:
+                        (vu, dep), limit, is_rack = hold
+                        if (now <= vu
+                                and (dep is None
+                                     or dep[0].get(dep[1], 0) == dep[2])
+                                and mm < g
+                                and (not is_rack
+                                     or (mr < g and g <= rack_cap))):
+                            ref = job.last_assignment_time
+                            if ref is None:
+                                ref = job.arrival
+                            # starvation(now) < limit, frames elided:
+                            # max(x, 0.0) and this compare agree for
+                            # every x (limit > 0 whenever a hold exists)
+                            if now - ref < limit:
+                                continue  # rejection provably stands
+                    level = on_offer(job, self, now)
                     if level is not None:
                         self._start(job, level, now)
                         free = self.cluster.free_gpus()
+                        mm = cl.max_free_on_machine()
+                        mr = cl.max_free_on_rack()
                         made_progress = True
+                if prof is not None:
+                    prof.add("offer_pass", perf_counter() - t_offer)
             # network-sensitive preemption: if the most-starved waiting job
             # cannot be placed at all, evict running jobs whose priority
             # value exceeds the waiting job's by a margin (hysteresis against
@@ -437,11 +598,12 @@ class ClusterSimulator:
                     top = self.waiting[0]  # sorted; removals keep order
                 elif self.policy.waiting_priority_static:
                     # dirty only within a round that already preempted
-                    top = min(self.waiting, key=_WAIT_KEY)
+                    top = self._dirty_top()
                 else:
                     top = min(self.waiting,
                               key=lambda j: (prio(j), j.arrival, j.job_id))
                 if self.cluster.free_gpus() < top.n_gpus:
+                    t_scan = perf_counter() if prof is not None else 0.0
                     top_p = prio(top)
                     # eligibility anchors on when the job was ASSIGNED its
                     # resources, not on run_start: _progress/_reprice reset
@@ -449,12 +611,10 @@ class ClusterSimulator:
                     # contention a re-priced job's clock restarted forever
                     # and preemption never tripped — exactly the congested
                     # regime it exists for
-                    victims = sorted(
-                        (j for j in self.running
-                         if now - j.last_assignment_time
-                         > self.preemption_min_runtime
-                         and prio(j) > top_p + self.policy.preemption_margin),
-                        key=lambda j: -prio(j))
+                    victims = self._preemption_victims(
+                        now, top_p + self.policy.preemption_margin, prio)
+                    if prof is not None:
+                        prof.add("preemption_scan", perf_counter() - t_scan)
                     freed = self.cluster.free_gpus()
                     for v in victims:
                         if (freed >= top.n_gpus or
@@ -464,6 +624,8 @@ class ClusterSimulator:
                         preempted += 1
                         freed += v.n_gpus
                         made_progress = True
+        if prof is not None:
+            prof.add("scheduling_round", perf_counter() - t_round)
 
     # ------------------------------------------------------------------
     def _reprice(self, now: float):
@@ -479,21 +641,35 @@ class ClusterSimulator:
         survive re-pricing) and simply resumes at the new rate.  The
         machine-slowdown factor pinned at placement time is reused — v1
         semantics apply SLOWDOWN events only to new placements, and fabric
-        churn must not retroactively change that."""
-        shares = self.fabric.fair_shares(self.running)
-        for job in self.running:
+        churn must not retroactively change that.
+
+        Incremental: the fabric's membership indices (updated at every
+        place/teardown) yield exactly the jobs whose share may have
+        changed — the members of the links the churn touched — so one
+        placement change re-prices its own contention neighbourhood, not
+        the whole network-tier fleet.  A job absent from the affected set
+        has an unchanged share, hence an unchanged (memoized) iteration
+        time, hence would have hit the ``it == job.iter_time`` skip below
+        anyway: skipping it up front is decision-identical (and keeps
+        ``n_reprices`` exact).  ``FairShareFabric.fair_shares`` remains
+        the reference recompute path; the differential suite pins
+        ``share_of`` bit-identical to it after every event."""
+        prof = self.profile
+        t0 = perf_counter() if prof is not None else 0.0
+        fabric = self.fabric
+        affected = fabric.take_affected()
+        for job in self.running_scattered:
+            # running_scattered preserves running order, minus the
+            # machine-tier majority that made every reprice O(running)
             if job.placement_tier != "network":
-                # traffic never leaves the ToR switch: no fabric share, so
-                # re-pricing would recompute the identical iteration time
-                # (memo hit) and continue — skip the whole probe.  At
-                # datacenter scale the machine-tier majority made every
-                # reprice O(running).
+                continue
+            if job.job_id not in affected:
                 continue
             it, exposed = self.comm.iteration_time(
                 job.model, job.compute_time_per_iter, job.placement,
                 self.cluster.machines_per_rack,
                 self.cluster.gpus_per_machine,
-                internode_bw=shares.get(job.job_id),
+                internode_bw=fabric.share_of(job.job_id),
                 plan=job.plan)
             it *= job.slow_factor
             if it == job.iter_time:
@@ -510,6 +686,8 @@ class ClusterSimulator:
             self._push(max(job.run_start, now) + remaining * it,
                        COMPLETE, (job.job_id, v))
             self.n_reprices += 1
+        if prof is not None:
+            prof.add("reprice", perf_counter() - t0)
 
     # ------------------------------------------------------------------
     def run(self, max_time: float = float("inf")) -> Dict:
@@ -524,6 +702,18 @@ class ClusterSimulator:
                 self.clock = max(self.clock, min(max_time, self.events[0][0]))
                 for job in self.running:
                     self._progress(job, self.clock)
+                # ... and record the horizon Timeline sample: without it the
+                # timeline (and avg_utilization) of a truncated cell ended at
+                # the last ROUND tick, under-reporting the final stretch.
+                # Skip only if a sample already exists at this exact instant
+                # (max_time landing on a processed ROUND tick).
+                if not self.timeline.t or self.timeline.t[-1] < self.clock:
+                    self.timeline.record(
+                        self.clock,
+                        self.cluster.total_gpus - self.cluster.free_gpus()
+                        - self.cluster.failed_gpus(),
+                        self.cluster.total_gpus,
+                        len(self.waiting) + len(self.running))
                 break
             self._step()
         return self.results()
@@ -601,7 +791,10 @@ class ClusterSimulator:
             # must not keep the clock — and the idle-sample timeline —
             # running after the last job finished
             if self.waiting or self.running or self._pending_arrivals:
-                self._push(t + self.round_period, ROUND, None)
+                if self._wedged_now():
+                    self.wedged = True
+                else:
+                    self._push(t + self.round_period, ROUND, None)
         elif kind == COMPLETE:
             job_id, version = payload
             if self._completion_version.get(job_id) != version:
@@ -613,8 +806,7 @@ class ClusterSimulator:
             self._progress(job, t)
             job.iters_done = job.total_iters
             job.finish_time = t
-            self._touch_fabric(job.placement)
-            self._untrack(job)
+            self._teardown_placement(job)
             self.cluster.release(job.placement)
             if job.placement_tier != "machine":
                 self.running_scattered.remove(job)
@@ -643,6 +835,7 @@ class ClusterSimulator:
                 self.cluster.fail_machine(payload)
                 self._churn_dirty = True
         elif kind == RECOVER:
+            self._pending_recovers -= 1
             if self.cluster.is_failed(payload):
                 self.cluster.recover_machine(payload)
                 self._op("machine_recover", t, machine=payload)
@@ -668,7 +861,28 @@ class ClusterSimulator:
         if self.event_hook is not None:
             self.event_hook(self, kind)
         if not self.events and (self.waiting or self.running):
-            self._push(self.clock + self.round_period, ROUND, None)
+            if self._wedged_now():
+                self.wedged = True
+            else:
+                self._push(self.clock + self.round_period, ROUND, None)
+
+    def _wedged_now(self) -> bool:
+        """True when the simulation can provably never make progress
+        again: jobs wait, nothing runs, no arrivals or machine recoveries
+        are pending, and no waiting job's demand fits the surviving free
+        capacity.  Every future round is then a no-op (offers need
+        ``free >= n_gpus``; preemption and migrations need running
+        victims; pending FAIL/SLOWDOWN events can only shrink capacity or
+        tag future placements), so re-arming the ROUND chain would spin
+        forever — the hang a failure schedule whose tail leaves machines
+        dead used to cause.  Conservative by design: any state from which
+        the old loop eventually terminated returns False, so terminating
+        schedules are untouched."""
+        if self.running or not self.waiting or self._pending_arrivals \
+                or self._pending_recovers:
+            return False
+        free = self.cluster.free_gpus()
+        return all(j.n_gpus > free for j in self.waiting)
 
     # ------------------------------------------------------------------
     def snapshot_bytes(self) -> bytes:
@@ -710,4 +924,14 @@ class ClusterSimulator:
             # only under a failure schedule, for the same reason
             out["n_machine_failures"] = self.n_machine_failures
             out["n_job_failures"] = self.n_job_failures
+        if self.wedged:
+            # the run terminated with jobs that can provably never place
+            # again (failure-schedule tail left the capacity short); only
+            # emitted when it happened, so terminating artifacts keep
+            # their legacy bytes
+            out["wedged"] = True
+        if self.profile is not None:
+            # opt-in (see repro.core.profile): wall-clock values — callers
+            # that need deterministic artifacts must treat it as volatile
+            out["profile"] = self.profile.as_dict()
         return out

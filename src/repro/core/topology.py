@@ -57,6 +57,7 @@ identically under failures.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import cached_property
 from typing import List, Optional, Sequence
 
 TIERS = ("machine", "rack", "network")
@@ -80,6 +81,33 @@ class Placement:
             return "machine"
         racks = {m // machines_per_rack for m in ms}
         return "rack" if len(racks) == 1 else "network"
+
+    @cached_property
+    def max_share(self) -> int:
+        """Largest per-machine GPU count in the allocation.  Since every
+        machine's free count is bounded by the cluster-wide maximum, a
+        machine-consolidation top-up (``free[m] + share >= g``) can only
+        succeed when ``max_free_on_machine + max_share >= g`` — the O(1)
+        pre-gate the upgrade scan runs every round for every scattered
+        job before paying for the per-machine walk.  (cached_property
+        writes to ``__dict__`` directly, so it composes with frozen.)"""
+        return max(c for _, c in self.alloc)
+
+    def rack_shares(self, machines_per_rack: int):
+        """``({rack: gpus}, max_gpus_on_one_rack)`` — memoized on the
+        (immutable) placement; a placement never migrates between
+        topologies, so the single cached geometry is safe.  Same dict
+        construction order as an inline rebuild (alloc is sorted), which
+        keeps the upgrade probe's short-circuit walk identical."""
+        cached = self.__dict__.get("_rack_shares")
+        if cached is None:
+            per: dict = {}
+            for m, c in self.alloc:
+                r = m // machines_per_rack
+                per[r] = per.get(r, 0) + c
+            cached = (per, max(per.values()))
+            self.__dict__["_rack_shares"] = cached
+        return cached
 
 
 class _FreeList(list):

@@ -53,9 +53,9 @@ def test_algo1_network_after_both_timers():
 def test_algo1_timers_zero_for_oversized_jobs():
     sim = _sim()
     pol = make_policy("dally")
-    t_mc, t_rk = pol._timers(_job(g=16), sim, now=0.0)
+    t_mc, t_rk, _, _ = pol._timers(_job(g=16), sim, now=0.0)
     assert t_mc == 0.0 and t_rk > 0.0       # can't fit one machine
-    t_mc, t_rk = pol._timers(_job(g=128), sim, now=0.0)
+    t_mc, t_rk, _, _ = pol._timers(_job(g=128), sim, now=0.0)
     assert t_mc == 0.0 and t_rk == 0.0      # can't fit one rack
 
 

@@ -20,17 +20,25 @@ from repro.experiments import SimOverrides, artifact_json, run_one
 # These failure-OFF cells predate the churn subsystem and pin that it left
 # legacy schedules (and schema v1 bytes) completely untouched: they are
 # re-verified, never re-pinned, by feature PRs.
+#
+# ALL SIX pins were re-generated once for the nearest-rank percentile fix
+# (metrics._pct: floor index -> ceil(p*n/100) - 1): every artifact carries
+# median/p95/p99 summary values, so every digest shifted.  The SCHEDULES
+# are unchanged — the hot-loop overhaul landing in the same change is
+# pinned decision-identical by the differential suites
+# (test_hotloop_identity.py, test_simulator_invariants.py), and these
+# digests were verified bit-stable under it before the metrics fix.
 EXPECTED = {
     ("smoke", "dally", 0, 20):
-        "6990ef4b197f915f50867e3e7128a7da679649dd609dbc1412359882521dcf1f",
+        "8b4d63b43fb71e06287b957a663e92511ff58563e4079d6b6ef8e0166863bcc7",
     ("hetero-racks", "tiresias", 1, 18):
-        "d01f0285149aa843453cf67b5748a4c57a42fd0c63fa8d0983a04c54f4a83732",
+        "2024bc02e9a6fbb0ea69995898b8ea1cac5b59f562a1d11beafaa0bff50df51d",
     # datacenter-scale cell (256 machines, lightly loaded): pins the O(1)
     # topology indices' placement decisions at scale.  Both the indexed
     # and the naive reference implementation must hash to this (see
     # tests/test_topology_index.py for the full differential suite).
     ("dc-256", "dally", 0, 80):
-        "45d85c19d322bafdc73eaf17983a191cd38ed0ec69b565edc0d84d107f94c236",
+        "abb3bd103f38671a457b521688a1d6bbe1bd2cab65041c06e592ef1ab0931272",
 }
 
 # machine-churn cells (schema v4): one seeded-MTBF and one deterministic
@@ -39,9 +47,9 @@ EXPECTED = {
 # pin the entire fail/recover subsystem end to end.
 EXPECTED_V4 = {
     ("failure-prone", "dally", 0, 32):
-        "aac77aa4d6294ad0068736b5e7413e0263bcea387e44c31d803ae696241227ba",
+        "23d8a9897c9cee3f547f4be56320d785392d1aed82dd2620f63de1dd784f60be",
     ("rolling-maintenance", "gandiva", 0, 32):
-        "78ccc8ceece0729d061946906650b4a2da7015ab0fd0b69b9fe65b80722e8957",
+        "c7018672f8ac018a8552c83d76434f51cb51fe216e9c01916d0189e94441c738",
 }
 
 # shared-fabric cell (schema v2): pins the contended-cell accounting,
@@ -53,7 +61,7 @@ EXPECTED_V4 = {
 # this digest keeps them from drifting again.
 EXPECTED_V2 = {
     ("congested-spine", "scatter", 0, 40):
-        "b804dd584f091c0cea9f5fd163a3faea9340ced4a6787b2358eecafbfb056120",
+        "85780c881f53f71118196d987088abb15dafb720f322680186fe55a16b480849",
 }
 
 

@@ -1,0 +1,246 @@
+"""Decision-identity suite for the hot-loop overhaul.
+
+The datacenter-scale fast paths (vectorized priority scoring, the
+incremental rack-yield victim index, the memoized tuner reads, the
+fabric's incremental membership) are all pure performance work: every
+test here pins them bit-identical to the scalar / recomputed reference
+implementations they replaced.  Plus regressions for the wedge
+terminator and the ``max_time`` horizon accounting.
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
+                        make_batch_trace)
+from repro.core.job import Job, nw_sens_many, two_das_many
+from repro.core.policies import make_policy
+
+ARCHS_L = list(ARCHS.values())
+COMM = CommModel.from_configs(ARCHS_L)
+
+
+# -- vectorized batch scorers: bitwise equality to the scalar methods --------
+
+_JOB_SPEC = st.tuples(
+    st.floats(0.0, 1e7),      # t_run
+    st.integers(0, 10_000),   # iters_done (clamped to total below)
+    st.integers(1, 10_000),   # total_iters
+    st.floats(0.01, 100.0),   # compute_time_per_iter
+    st.floats(0.0, 1e6),      # run_start
+    st.floats(1e-3, 1e4),     # iter_time
+    st.booleans(),            # placed
+    st.integers(1, 512),      # n_gpus
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(specs=st.lists(_JOB_SPEC, min_size=1, max_size=50),
+       now=st.floats(0.0, 2e6))
+def test_batch_scorers_bitwise_equal_scalar(specs, now):
+    jobs = []
+    for i, (t_run, done, total, ctpi, rs, itime, placed, g) in \
+            enumerate(specs):
+        j = Job(job_id=i, model="m", n_gpus=g, total_iters=total,
+                compute_time_per_iter=ctpi)
+        j.t_run = t_run
+        j.iters_done = min(done, total)
+        j.run_start = rs
+        j.iter_time = itime
+        if placed:
+            j.placement = object()  # _live only checks `is not None`
+        jobs.append(j)
+    ns = nw_sens_many(jobs, now)
+    das = two_das_many(jobs, now)
+    if ns is None:
+        pytest.skip("numpy unavailable: scalar path only")
+    for i, j in enumerate(jobs):
+        assert ns[i] == j.nw_sens(now), i
+        assert das[i] == j.two_das(now), i
+
+
+# -- vector vs scalar hot paths: identical schedules -------------------------
+
+def _run_cell(policy, n_jobs=40, seed=7):
+    sim = ClusterSimulator(ClusterTopology(n_racks=1),
+                           make_policy(policy), COMM)
+    for j in make_batch_trace(ARCHS_L, n_jobs=n_jobs, seed=seed):
+        sim.submit(j)
+    return sim.run()
+
+
+@pytest.mark.parametrize("policy", ["dally", "tiresias"])
+def test_vector_and_scalar_paths_produce_identical_results(policy,
+                                                           monkeypatch):
+    """Force the numpy paths on for one run and off for the other (via
+    the size thresholds) on a congested preemption-heavy cell: the
+    results dicts must be equal to the last bit."""
+    import repro.core.policies.dally as dally_mod
+    import repro.core.simulator as sim_mod
+
+    monkeypatch.setattr(sim_mod, "_VEC_MIN_VICTIMS", 0)
+    monkeypatch.setattr(dally_mod, "_VEC_MIN_SCORE", 0)
+    vectored = _run_cell(policy)
+    monkeypatch.setattr(sim_mod, "_VEC_MIN_VICTIMS", 10**9)
+    monkeypatch.setattr(dally_mod, "_VEC_MIN_SCORE", 10**9)
+    scalar = _run_cell(policy)
+    assert vectored == scalar
+
+
+# -- incremental rack-yield victim index vs full-scan reference --------------
+
+class YieldIndexProbe:
+    """After every event: the incremental victim index must answer
+    exactly like a full rescan of the running set — same racks, same
+    victims, same (running-list) order."""
+
+    def __init__(self):
+        self.events = 0
+        self.saw_nonempty = False
+
+    def __call__(self, sim, kind):
+        self.events += 1
+        pol, now = sim.policy, sim.clock
+        idx = pol._tolerant_buckets_indexed(sim, now)
+        ref = pol._tolerant_buckets_scan(sim, now)
+        assert idx == ref, (sim.clock, idx, ref)
+        self.saw_nonempty |= bool(ref)
+
+
+def test_yield_victim_index_matches_full_scan():
+    from repro.experiments import get_scenario
+    sc = get_scenario("moe-heavy").with_overrides(n_jobs=30)
+    probe = YieldIndexProbe()
+    sim = sc.build_sim(ARCHS_L, policy="dally", seed=0)
+    sim.event_hook = probe
+    res = sim.run()
+    assert probe.events > 0
+    assert probe.saw_nonempty, "cell too quiet: index never populated"
+    assert res["n_finished"] == 30
+
+
+# -- wedge detection: dead-machine tails must terminate, flagged -------------
+
+def test_failure_tail_wedge_terminates_and_flags():
+    """A failure schedule that leaves every machine dead used to spin the
+    ROUND re-arm forever (empty heap, waiting jobs, zero capacity).  The
+    run must now terminate with the ``wedged`` flag set."""
+    cl = ClusterTopology(n_racks=1)
+    sim = ClusterSimulator(
+        cl, make_policy("dally"), COMM,
+        failure_events=[(1000.0, "fail", m) for m in range(8)])
+    for k in range(4):
+        sim.submit(Job(job_id=k, model="minicpm3-4b", n_gpus=8,
+                       total_iters=100_000, compute_time_per_iter=1.0,
+                       arrival=0.0))
+    res = sim.run()
+    assert sim.wedged
+    assert res["wedged"] is True
+    assert res["n_finished"] == 0
+    assert not sim.running and len(sim.waiting) == 4
+    assert sim.cluster.free_gpus() == 0
+
+
+def test_partial_capacity_wedge_terminates():
+    """Survivor capacity exists but no waiting job fits it: still a
+    provable wedge (offers need free >= n_gpus and nothing runs)."""
+    cl = ClusterTopology(n_racks=1)
+    sim = ClusterSimulator(
+        cl, make_policy("dally"), COMM,
+        failure_events=[(50.0, "fail", m) for m in range(1, 8)])
+    # finishes long before the failures land
+    sim.submit(Job(job_id=0, model="minicpm3-4b", n_gpus=8, total_iters=10,
+                   compute_time_per_iter=1.0, arrival=0.0))
+    # needs 16 > the 8 surviving GPUs: waits forever
+    sim.submit(Job(job_id=1, model="minicpm3-4b", n_gpus=16,
+                   total_iters=10, compute_time_per_iter=1.0,
+                   arrival=100.0))
+    res = sim.run()
+    assert res["wedged"] is True
+    assert res["n_finished"] >= 1
+    assert [j.job_id for j in sim.waiting] == [1]
+
+
+def test_terminating_runs_carry_no_wedge_key():
+    res = _run_cell("dally", n_jobs=10)
+    assert "wedged" not in res
+
+
+# -- max_time horizon: truncated run == advanced state at the horizon --------
+
+def _fresh(seed, n_jobs=14):
+    sim = ClusterSimulator(ClusterTopology(n_racks=1),
+                           make_policy("dally"), COMM)
+    for j in make_batch_trace(ARCHS_L, n_jobs=n_jobs, seed=seed):
+        sim.submit(j)
+    return sim
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100), frac=st.floats(0.05, 0.95))
+def test_truncated_run_equals_advanced_state_at_horizon(seed, frac):
+    """``run(max_time=T)`` must leave exactly the state of an untruncated
+    simulation driven past T (same processed-event prefix, progress folded
+    at T), plus ONE extra timeline sample at the horizon itself."""
+    times = []
+    ref = _fresh(seed)
+    ref.event_hook = lambda sim, kind: times.append(sim.clock)
+    ref.run()
+    ts = sorted(set(times))
+    i = max(1, min(int(frac * len(ts)), len(ts) - 1))
+    horizon = (ts[i - 1] + ts[i]) / 2.0
+    if not ts[i - 1] < horizon < ts[i]:
+        return  # float-adjacent event times: no strictly-between horizon
+
+    a = _fresh(seed)
+    res_a = a.run(max_time=horizon)
+
+    b = _fresh(seed)
+    b.begin()
+    b.advance_to(horizon)       # processes events < T == events <= T here
+    for job in b.running:
+        b._progress(job, horizon)
+    res_b = b.results()
+
+    tl_a, tl_b = res_a["timeline"], res_b["timeline"]
+    assert tl_a["t"][-1] == horizon  # the new horizon sample
+    assert tl_a["t"][:-1] == tl_b["t"]
+    assert tl_a["busy_gpus"][:-1] == tl_b["busy_gpus"]
+    assert tl_a["jobs_remaining"][:-1] == tl_b["jobs_remaining"]
+    for key in res_a:
+        if key not in ("timeline", "avg_utilization"):
+            assert res_a[key] == res_b[key], key
+
+
+def test_truncated_run_records_horizon_timeline_sample():
+    horizon = 4 * 3600.0
+    sim = _fresh(seed=3, n_jobs=30)
+    res = sim.run(max_time=horizon)
+    assert res["n_finished"] < 30
+    tl = res["timeline"]
+    assert tl["t"][-1] == horizon
+    busy = (sim.cluster.total_gpus - sim.cluster.free_gpus()
+            - sim.cluster.failed_gpus())
+    assert tl["busy_gpus"][-1] == busy
+    assert tl["jobs_remaining"][-1] == len(sim.waiting) + len(sim.running)
+
+
+# -- profiling counters: opt-in, and decision-free -----------------------------
+
+def test_profile_counters_opt_in_and_identical_results():
+    def run(profile):
+        sim = ClusterSimulator(ClusterTopology(n_racks=1),
+                               make_policy("dally"), COMM, profile=profile)
+        for j in make_batch_trace(ARCHS_L, n_jobs=25, seed=4):
+            sim.submit(j)
+        return sim.run()
+
+    plain = run(False)
+    profiled = run(True)
+    assert "profile" not in plain
+    prof = profiled.pop("profile")
+    assert profiled == plain  # the counters must not touch the schedule
+    for phase in ("scheduling_round", "offer_pass", "rack_yield_scan",
+                  "upgrade_scan", "tuner_query"):
+        assert prof[phase]["calls"] > 0, phase
+        assert prof[phase]["wall_s"] >= 0.0

@@ -1,0 +1,49 @@
+"""Percentile (nearest-rank) unit tests.
+
+Regression: ``_pct`` used a floor index ``int(p/100 * n)`` — an
+off-by-one against the nearest-rank definition (the smallest value with
+at least p% of the sample at or below it, index ``ceil(p*n/100) - 1``),
+made worse by float drift (``0.95 * 20 == 19.000000000000004``).  A
+20-sample p95 returned the maximum instead of the 19th value.
+"""
+import math
+from fractions import Fraction
+
+from repro.core.metrics import _pct, _stats
+
+
+def test_pct_edge_cases():
+    assert _pct([], 95) == 0.0
+    assert _pct([5.0], 50) == 5.0
+    assert _pct([5.0], 99) == 5.0
+    xs = [3.0, 1.0, 2.0, 4.0]   # unsorted input is sorted internally
+    assert _pct(xs, 50) == 2.0  # ceil(0.5 * 4) = 2nd value
+    assert _pct(xs, 95) == 4.0
+    assert _pct(xs, 100) == 4.0
+
+
+def test_pct_p95_of_20_is_19th_value():
+    """The motivating regression: nearest-rank p95 of 1..20 is 19, not
+    the maximum (the old floor index + float drift returned 20)."""
+    xs = [float(i) for i in range(1, 21)]
+    assert _pct(xs, 95) == 19.0
+    assert _pct(xs, 50) == 10.0
+    assert _pct(xs, 99) == 20.0
+
+
+def test_pct_matches_exact_nearest_rank_definition():
+    """Pin the float implementation against exact rational arithmetic:
+    nearest-rank index = ceil(p*n/100) - 1 computed in Fractions."""
+    for n in range(1, 64):
+        xs = [float(i) for i in range(1, n + 1)]
+        for p in (1, 25, 50, 75, 90, 95, 99, 100):
+            k = math.ceil(Fraction(p * n, 100)) - 1
+            assert _pct(xs, p) == xs[k], (n, p)
+
+
+def test_stats_keys():
+    s = _stats([2.0, 1.0, 3.0])
+    assert set(s) == {"avg", "median", "p95", "p99"}
+    assert s["avg"] == 2.0
+    assert s["median"] == 2.0
+    assert s["p95"] == 3.0

@@ -201,6 +201,14 @@ class FabricUsageProbe:
         self.events += 1
         fab, cl = sim.fabric, sim.cluster
         shares = fab.fair_shares(sim.running)
+        # the fabric's incremental membership must mirror a from-scratch
+        # recompute after every event, and its share must be bit-identical
+        # to the reference path for every job priced off clean links (a
+        # dirty link is mid-coalesce: the next re-price drains it)
+        fab.debug_assert_synced(sim.running)
+        for jid, links in fab._links_of.items():
+            if all(link not in fab._dirty for link in links):
+                assert fab.share_of(jid) == shares[jid], (jid, sim.clock)
         users = {}
         for j in sim.running:
             links = cl.placement_links(j.placement)
