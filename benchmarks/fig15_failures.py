@@ -43,11 +43,12 @@ def _cells(base, mtbf_h, n_jobs):
         # explicit replace.  checkpoint_overhead stays: ordinary
         # preemptions pay the same restore surcharge in every cell, so
         # the off-vs-churn delta measures churn alone
-        sc = dataclasses.replace(base, failure_mode=None, failure_kw={})
+        sc = dataclasses.replace(base, faults=None)
     else:
         sc = dataclasses.replace(
-            base, failure_kw={**dict(base.failure_kw),
-                              "mtbf": mtbf_h * 3600.0})
+            base, faults=dataclasses.replace(
+                base.faults, knobs={**dict(base.faults.knobs),
+                                    "mtbf": mtbf_h * 3600.0}))
     out = {}
     for pol in POLICIES:
         m = run_one_timed(sc, policy=pol, seed=SEED,

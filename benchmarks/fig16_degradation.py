@@ -1,0 +1,124 @@
+"""Fig. 16 (beyond the paper): scheduling under analog degradation faults.
+
+Machines do not only die — they slow down.  Trace studies of production
+GPU clusters (Hu et al., 2021; Kalos-style telemetry) report chronic
+stragglers (thermal throttling, ECC retirement) and derated or flapping
+rack uplinks that silently stretch every placement crossing them.  This
+benchmark runs the degraded-cluster scenario (batch workload on a
+fair-share fabric under mixed straggler + flapping-uplink churn) for
+every policy while the degradation scope widens, against the same
+workload with degradation off.  Consolidated placements dodge the
+derated fabric and dally's evict-or-tolerate straggler reaction escapes
+throttled machines — the headline rows are Dally's makespan reduction vs
+the scatter baseline at each severity, and each policy's
+exposed-communication degradation as link churn taxes cross-rack tiers.
+
+    python -m benchmarks.fig16_degradation           # full: 300-job cells
+    python -m benchmarks.fig16_degradation --small   # CI smoke: 80-job cells
+
+Writes benchmarks/artifacts/fig16_degradation.json plus one
+telemetry-enabled cell's per-interval time-series to
+benchmarks/artifacts/fig16_telemetry.json; `perf_gate.py` times a
+degradation-heavy cell as the `degradation_small` benchmark, and
+tests/test_degradation.py pins the dally-beats-scatter acceptance claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .common import SimOverrides, row, run_one_timed, save
+
+POLICIES = ["scatter", "gandiva", "tiresias", "dally"]
+SCENARIO = "degraded-cluster"
+SEED = 0
+
+# the severity axis: fraction of machines that straggle / racks that
+# flap, None = degradation off
+FULL_SCOPES = (None, 0.25, 0.5)
+SMALL_SCOPES = (None, 0.5)
+
+
+def _label(scope):
+    return "off" if scope is None else f"scope-{int(scope * 100)}pct"
+
+
+def _cells(base, scope, n_jobs):
+    if scope is None:
+        # degradation off, fabric kept: the off-vs-on delta measures
+        # degradation alone, not fair-share contention
+        sc = dataclasses.replace(base, faults=None)
+    else:
+        sc = dataclasses.replace(
+            base, faults=dataclasses.replace(
+                base.faults, degradation_kw={"machine_scope": scope,
+                                             "link_scope": scope}))
+    out = {}
+    for pol in POLICIES:
+        m = run_one_timed(sc, policy=pol, seed=SEED,
+                          overrides=SimOverrides(n_jobs=n_jobs))["metrics"]
+        out[pol] = {
+            "makespan_hours": m["makespan"] / 3600,
+            "total_comm_hours": m["total_comm_time"] / 3600,
+            "n_degrade_events": m.get("n_degrade_events", 0),
+            "n_degrade_reprices": m.get("n_degrade_reprices", 0),
+            "n_straggler_evictions": m.get("n_straggler_evictions", 0),
+        }
+    return out
+
+
+def _telemetry_cell(n_jobs):
+    """One dally cell with the Kalos-style time-series enabled — written
+    as its own artifact (the series is bulky; fig16's summary stays
+    lean)."""
+    from repro.experiments import FaultSpec, get_scenario
+    art = run_one_timed(get_scenario(SCENARIO), policy="dally", seed=SEED,
+                        overrides=SimOverrides(
+                            n_jobs=n_jobs,
+                            faults=FaultSpec(telemetry=True)))
+    tel = art["metrics"]["telemetry"]
+    save("fig16_telemetry", {"scenario": SCENARIO, "policy": "dally",
+                             "seed": SEED, "n_jobs": n_jobs,
+                             "telemetry": tel})
+    row("fig16.telemetry_samples", len(tel["t"]),
+        f"{len(tel['machines'])} machines x {len(tel['links'])} links")
+
+
+def main(small=False):
+    from repro.experiments import get_scenario
+    n_jobs = 80 if small else 300
+    base = get_scenario(SCENARIO)
+    out = {"mode": "small" if small else "full", "n_jobs": n_jobs,
+           "levels": {}}
+    for scope in SMALL_SCOPES if small else FULL_SCOPES:
+        label = _label(scope)
+        cells = _cells(base, scope, n_jobs)
+        out["levels"][label] = cells
+        for pol in POLICIES:
+            row(f"fig16.makespan_hours.{label}.{pol}",
+                round(cells[pol]["makespan_hours"], 1),
+                f"{cells[pol]['n_straggler_evictions']} straggler "
+                "evictions")
+        sc, da = cells["scatter"], cells["dally"]
+        row(f"fig16.dally_vs_scatter_makespan_reduction_pct.{label}",
+            round(100 * (sc["makespan_hours"] - da["makespan_hours"])
+                  / max(sc["makespan_hours"], 1e-9), 1),
+            "acceptance: > 0 whenever degradation is on")
+    # exposed-comm degradation at the widest scope vs degradation off
+    harshest = _label((SMALL_SCOPES if small else FULL_SCOPES)[-1])
+    for pol in POLICIES:
+        off = out["levels"]["off"][pol]["total_comm_hours"]
+        on = out["levels"][harshest][pol]["total_comm_hours"]
+        row(f"fig16.exposed_comm_degradation_pct.{harshest}.{pol}",
+            round(100 * (on - off) / max(off, 1e-9), 1),
+            "derated uplinks tax every cross-rack placement")
+    _telemetry_cell(n_jobs)
+    save("fig16_degradation", out)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--small", action="store_true",
+                    help="CI-sized cells (80 jobs)")
+    main(small=ap.parse_args().small)

@@ -86,14 +86,28 @@ def _time_failures_small() -> float:
     import dataclasses
 
     from repro.experiments import SimOverrides, get_scenario, run_one
+    base = get_scenario("failure-prone")
     sc = dataclasses.replace(
-        get_scenario("failure-prone"),
-        failure_kw={**dict(get_scenario("failure-prone").failure_kw),
-                    "mtbf": 6 * 3600.0, "mttr": 1800.0})
+        base, faults=dataclasses.replace(
+            base.faults, knobs={**dict(base.faults.knobs),
+                                "mtbf": 6 * 3600.0, "mttr": 1800.0}))
     ov = SimOverrides(n_jobs=400)
     t0 = time.perf_counter()
     run_one(sc, policy="dally", seed=0, overrides=ov)
     run_one(sc, policy="scatter", seed=0, overrides=ov)
+    return time.perf_counter() - t0
+
+
+def _time_degradation_small() -> float:
+    # degradation-heavy cell: mixed straggler + flapping-uplink churn on
+    # a fair-share fabric — the DEGRADE handler, straggler re-pricing,
+    # link derate re-pricing, and dally's per-round straggler scan are
+    # all hot here; guards the analog-fault subsystem's wall-clock
+    from repro.experiments import SimOverrides, run_one
+    ov = SimOverrides(n_jobs=300)
+    t0 = time.perf_counter()
+    run_one("degraded-cluster", policy="dally", seed=0, overrides=ov)
+    run_one("degraded-cluster", policy="scatter", seed=0, overrides=ov)
     return time.perf_counter() - t0
 
 
@@ -116,6 +130,7 @@ BENCHMARKS = {
     "smoke_sweep": _time_smoke_sweep,
     "fig14_small": _time_fig14_small,
     "failures_small": _time_failures_small,
+    "degradation_small": _time_degradation_small,
     "dally_dc_small": _time_dally_dc,
 }
 

@@ -7,8 +7,8 @@ import time
 
 from . import (fig7_makespan, fig8_tails, fig9_jct_cdf, fig10_poisson,
                fig11_utilization, fig12_contention, fig13_parallelism,
-               fig14_scale, fig15_failures, roofline_report,
-               table1_comm_latency, table2_jct_stats)
+               fig14_scale, fig15_failures, fig16_degradation,
+               roofline_report, table1_comm_latency, table2_jct_stats)
 
 ALL = [
     ("table1_comm_latency", table1_comm_latency.main),
@@ -22,6 +22,7 @@ ALL = [
     ("fig13_parallelism", fig13_parallelism.main),
     ("fig14_scale", fig14_scale.main),
     ("fig15_failures", fig15_failures.main),
+    ("fig16_degradation", fig16_degradation.main),
     ("roofline_report", roofline_report.main),
 ]
 

@@ -18,6 +18,7 @@ regression suites, while internal module layout may shift between PRs::
 """
 from repro.core.policies import POLICIES, make_policy
 from repro.core.simulator import ClusterSimulator
+from repro.experiments.faults import FaultSpec
 from repro.experiments.runner import (
     SimOverrides,
     artifact_json,
@@ -35,7 +36,8 @@ from repro.service import JobSpec, SchedulerService
 __all__ = [
     # experiment cells
     "Scenario", "SCENARIOS", "get_scenario", "register",
-    "SimOverrides", "run_one", "run_one_timed", "artifact_json",
+    "SimOverrides", "FaultSpec", "run_one", "run_one_timed",
+    "artifact_json",
     # policies
     "POLICIES", "make_policy",
     # the simulator and the online service around it

@@ -28,6 +28,7 @@ from .metrics import summarize  # noqa: F401
 from .parallelism import ParallelPlan, plan_for, pure_dp_plan  # noqa: F401
 from .profile import SimProfile  # noqa: F401
 from .simulator import ClusterSimulator  # noqa: F401
+from .telemetry import Telemetry  # noqa: F401
 from .topology import (  # noqa: F401
     ClusterTopology,
     NaiveClusterTopology,
@@ -37,10 +38,15 @@ from .trace import (  # noqa: F401
     load_csv_trace,
     make_batch_trace,
     make_bursty_trace,
+    make_flapping_uplink_degradations,
+    make_mixed_degradations,
     make_mixed_trace,
     make_mtbf_failures,
     make_philly_trace,
     make_poisson_trace,
     make_rolling_maintenance,
+    make_slow_nic_degradations,
+    make_straggler_degradations,
+    resolve_degradation_kw,
     save_csv_trace,
 )

@@ -64,10 +64,50 @@ class FairShareFabric:
         self._links_of: Dict[int, tuple] = {}
         self._loads: Dict[tuple, float] = {}
         self._dirty: set = set()
+        # per-link bandwidth derating (degradation subsystem): factor in
+        # (0, 1) while a link is degraded, absent when healthy.  Applied
+        # inside _capacity so BOTH pricing paths (the reference
+        # fair_shares and the incremental share_of) compose derating with
+        # fair-share contention identically; an absent link returns the
+        # nominal capacity float untouched, keeping degradation-off runs
+        # bit-identical.
+        self._derate: Dict[tuple, float] = {}
 
     def _capacity(self, link) -> float:
-        return self.spine_bw if link == self.cluster.SPINE \
+        cap = self.spine_bw if link == self.cluster.SPINE \
             else self.rack_uplink_bw
+        d = self._derate.get(link)
+        return cap if d is None else cap * d
+
+    # -- degradation seam ------------------------------------------------
+    def set_derate(self, link, factor: float) -> bool:
+        """Derate ``link`` to ``factor`` x nominal capacity (1.0
+        restores).  Returns True when the change can affect a currently
+        registered placement — the caller should re-price then."""
+        if factor == 1.0:
+            changed = self._derate.pop(link, None) is not None
+        else:
+            changed = self._derate.get(link) != factor
+            self._derate[link] = factor
+        if changed and self._members.get(link):
+            self._dirty.add(link)
+            return True
+        return False
+
+    def effective_bandwidth(self, link) -> float:
+        """Telemetry probe: the bandwidth a marginal participant would see
+        through ``link`` right now — derated capacity split by the current
+        fair-share load, capped at the NIC rate (nominal capacity, NIC-
+        capped, when nobody loads it)."""
+        members = self._members.get(link)
+        if not members:
+            return min(self.nic_bw, self._capacity(link))
+        load = self._loads.get(link)
+        if load is None or link in self._dirty:
+            load = 0.0
+            for w in members.values():
+                load += w
+        return min(self.nic_bw, self._capacity(link) / load)
 
     def fair_shares(self, jobs: Iterable) -> Dict[int, float]:
         """job_id -> effective inter-node bandwidth for every cross-rack

@@ -44,6 +44,8 @@ class Job:
     # upgrade probe per round was pure waste at datacenter scale)
     iter_time: float = 0.0       # current per-iteration time (w/ comm)
     slow_factor: float = 1.0     # machine-slowdown factor of this placement
+    degrade_factor: float = 1.0  # live straggler/throttling factor (max
+    # over the placement's currently degraded machines; 1.0 = healthy)
     iters_frac: float = 0.0      # partial iteration carried across re-prices
     run_start: float = 0.0       # when the current run segment started
     # when the job last changed resource state: set to `now` at every

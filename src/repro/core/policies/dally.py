@@ -238,9 +238,53 @@ class DallyPolicy(Policy):
                 by_rack.setdefault(racks.pop(), []).append(t)
         return by_rack
 
+    # -- straggler reaction (degradation subsystem) ---------------------
+    # evict-or-tolerate: a job pinned to a badly degraded machine is
+    # preempted so it re-places on healthy capacity; mild degradation is
+    # ridden out (the restore surcharge would cost more than the slowdown)
+    straggler_evict_factor = 1.5
+    straggler_evictions_per_round = 2
+
+    def _straggler_scan(self, sim, now):
+        """Evict-or-tolerate over the currently degraded machines (via
+        the per-machine index — never a running-set scan).  Eligibility
+        is gated exactly like preemption: a job keeps its placement
+        until it has held resources for ``preemption_min_runtime`` —
+        and tolerates when the factor is mild, when healthy free
+        capacity could not re-host it anyway, or (implicitly) when it
+        is about to finish (the COMPLETE event fires before the next
+        round)."""
+        evicted = 0
+        for m in sorted(sim.machine_degrade):
+            if evicted >= self.straggler_evictions_per_round:
+                return
+            if sim.machine_degrade[m] < self.straggler_evict_factor:
+                continue  # tolerate: mild episode
+            for job in list(sim._jobs_on_machine.get(m, {}).values()):
+                if evicted >= self.straggler_evictions_per_round:
+                    return
+                if job.placement is None:
+                    continue
+                if job.degrade_factor < self.straggler_evict_factor:
+                    continue  # this job's worst machine is a mild one
+                if now - job.last_assignment_time \
+                        <= sim.preemption_min_runtime:
+                    continue  # tolerate: not yet preemption-eligible
+                if sim.cluster.free_gpus() < job.n_gpus:
+                    continue  # tolerate: nowhere to re-host it
+                sim.preempt(job, now)
+                sim.n_straggler_evictions += 1
+                evicted += 1
+
     def on_round(self, sim, now):
         prof = sim.profile
         t0 = perf_counter() if prof is not None else 0.0
+        if sim.machine_degrade:
+            # empty dict on every degradation-off run: goldens untouched
+            self._straggler_scan(sim, now)
+        if prof is not None:
+            prof.add("straggler_scan", perf_counter() - t0)
+            t0 = perf_counter()
         self._yield_rack_slots(sim, now)
         if prof is not None:
             prof.add("rack_yield_scan", perf_counter() - t0)

@@ -65,6 +65,7 @@ from .fabric import FairShareFabric
 from .job import Job
 from .metrics import Timeline
 from .profile import SimProfile
+from .telemetry import Telemetry, link_key
 from .topology import ClusterTopology
 
 try:  # optional: the vectorized victim scan falls back to the scalar one
@@ -72,7 +73,8 @@ try:  # optional: the vectorized victim scan falls back to the scalar one
 except ImportError:  # pragma: no cover - numpy ships with the toolchain
     _np = None
 
-ARRIVAL, ROUND, COMPLETE, SLOWDOWN, FAIL, RECOVER = 0, 1, 2, 3, 4, 5
+ARRIVAL, ROUND, COMPLETE, SLOWDOWN, FAIL, RECOVER, DEGRADE = \
+    0, 1, 2, 3, 4, 5, 6
 
 _WAIT_KEY = attrgetter("_wait_key")
 
@@ -90,9 +92,10 @@ class ClusterSimulator:
                  max_preemptions_per_round: int = 4,
                  slowdown_events: Optional[List] = None,
                  failure_events: Optional[List] = None,
+                 degradation_events: Optional[List] = None,
                  fabric: Optional[FairShareFabric] = None,
                  event_hook: Optional[Callable] = None,
-                 profile: bool = False):
+                 profile: bool = False, telemetry: bool = False):
         self.cluster = cluster
         self.policy = policy
         self.comm = comm
@@ -182,6 +185,50 @@ class ClusterSimulator:
             if kind == "recover":
                 self._pending_recovers += 1
             self._push(t, FAIL if kind == "fail" else RECOVER, machine)
+        # analog degradation schedule: (t, "machine"|"link", target,
+        # factor) tuples (see repro.core.trace.make_straggler_degradations
+        # and friends).  Machine events multiply the iteration time of
+        # every job touching the machine; link events derate a fabric
+        # link's capacity.  As with failures, `degradation_events is not
+        # None` — even an empty list — marks the subsystem enabled, which
+        # gates the degradation keys in results() (degradation-off
+        # artifacts must stay byte-identical to the legacy schemas).
+        self._degradation_enabled = degradation_events is not None
+        self.machine_degrade: Dict[int, float] = {}
+        # jobs owed a straggler re-price, coalesced over same-instant
+        # DEGRADE bursts (a job spanning two machines degraded at the same
+        # timestamp re-prices once) and drained at the _step tail after
+        # any fabric re-price has settled the link loads
+        self._degrade_due: Dict[int, Job] = {}
+        self.n_degrade_events = 0
+        self.n_degrade_reprices = 0
+        self.n_straggler_evictions = 0
+        for t, dkind, target, factor in (degradation_events or []):
+            assert dkind in ("machine", "link"), dkind
+            self._push(t, DEGRADE, (dkind, target, factor))
+        # the per-machine victim index serves both FAIL (victim scan) and
+        # machine-DEGRADE (re-price scan); runs with neither subsystem
+        # enabled pay nothing
+        self._track_machine_jobs = (self._failures_enabled
+                                    or self._degradation_enabled)
+        # opt-in Kalos-style per-interval telemetry (see
+        # repro.core.telemetry): sampled at every ROUND tick — the
+        # Timeline's cadence — so the per-machine busy series sums exactly
+        # to the aggregate busy series.  None (the default) keeps the hot
+        # loop at one `is None` check and results() byte-identical.
+        self.telemetry: Optional[Telemetry] = None
+        if telemetry:
+            machines = [m for m in range(cluster.n_machines)
+                        if cluster.machine_capacity(m) > 0]
+            links = ()
+            if fabric is not None:
+                links = tuple(("uplink", r)
+                              for r in range(cluster.n_racks)) \
+                    + (cluster.SPINE,)
+            self.telemetry = Telemetry(machines,
+                                       [link_key(li) for li in links])
+            self._telemetry_links = links
+            self._telemetry_index = {m: i for i, m in enumerate(machines)}
         self._completion_version: Dict[int, int] = {}
         self._pending_arrivals = 0
 
@@ -245,6 +292,15 @@ class ClusterSimulator:
             f = max(f, self.machine_slowdown.get(m, 1.0))
         return f
 
+    def _degrade_factor(self, placement) -> float:
+        """Live straggler factor of a placement: the max over its
+        currently degraded machines (a synchronous data-parallel step
+        moves at the slowest participant's pace), 1.0 when healthy."""
+        f = 1.0
+        for m, _ in placement.alloc:
+            f = max(f, self.machine_degrade.get(m, 1.0))
+        return f
+
     def _start(self, job: Job, level: str, now: float):
         placement = self.cluster.allocate(job.n_gpus, level)
         assert placement is not None, (job.job_id, level)
@@ -262,6 +318,14 @@ class ClusterSimulator:
         # reuses the pinned value so contention on/off stays a clean A/B
         job.slow_factor = self._slow_factor(placement)
         it *= job.slow_factor
+        # unlike slow_factor, the degradation factor is LIVE: DEGRADE
+        # events re-price running placements (see _reprice_degraded).
+        # The separate guarded multiply keeps degradation-off floats
+        # bit-identical (no combined product, no unconditional *= 1.0)
+        job.degrade_factor = (self._degrade_factor(placement)
+                              if self.machine_degrade else 1.0)
+        if job.degrade_factor != 1.0:
+            it *= job.degrade_factor
         job.iter_time = it
         job.exposed_comm_per_iter = exposed
         job.iters_frac = 0.0  # a fresh placement restarts its iteration
@@ -274,7 +338,7 @@ class ClusterSimulator:
         job.last_assignment_time = now
         self.wedged = False  # a placement is progress (service re-submits)
         self.running.append(job)
-        if self._failures_enabled:
+        if self._track_machine_jobs:
             for m, _ in placement.alloc:
                 self._jobs_on_machine.setdefault(m, {})[job.job_id] = job
         if tier != "machine":
@@ -340,7 +404,7 @@ class ClusterSimulator:
         per-machine victim index, unregister it from the fabric's
         incremental membership, and notify the policy's candidate
         indices."""
-        if self._failures_enabled:
+        if self._track_machine_jobs:
             for m, _ in job.placement.alloc:
                 del self._jobs_on_machine[m][job.job_id]
         if self.fabric is not None and job.placement_tier == "network":
@@ -672,6 +736,8 @@ class ClusterSimulator:
                 internode_bw=fabric.share_of(job.job_id),
                 plan=job.plan)
             it *= job.slow_factor
+            if job.degrade_factor != 1.0:
+                it *= job.degrade_factor
             if it == job.iter_time:
                 continue
             if now > job.run_start:
@@ -688,6 +754,84 @@ class ClusterSimulator:
             self.n_reprices += 1
         if prof is not None:
             prof.add("reprice", perf_counter() - t0)
+
+    def _reprice_degraded(self, now: float):
+        """Straggler re-pricing: machine degradation factors changed, so
+        re-price exactly the jobs placed on the touched machines (queued
+        in ``_degrade_due`` by the DEGRADE handler via the per-machine
+        index — never a scan of the running set).  Mirrors ``_reprice``'s
+        exact-fold contract: in-flight partial iterations carry over in
+        ``iters_frac``, a job mid-restore keeps its future ``run_start``,
+        and an unchanged iteration time is skipped without touching the
+        event heap.  Runs at the ``_step`` tail AFTER any fabric re-price
+        has settled the link loads, so a degraded cross-rack job is
+        priced at its current fair share and its current straggler factor
+        in one pass."""
+        prof = self.profile
+        t0 = perf_counter() if prof is not None else 0.0
+        due = self._degrade_due
+        self._degrade_due = {}
+        for job in due.values():
+            if job.placement is None:
+                continue  # evicted or completed since it was queued
+            factor = self._degrade_factor(job.placement)
+            if factor == job.degrade_factor:
+                continue
+            job.degrade_factor = factor
+            if self.fabric is not None and job.placement_tier == "network":
+                it, exposed = self.comm.iteration_time(
+                    job.model, job.compute_time_per_iter, job.placement,
+                    self.cluster.machines_per_rack,
+                    self.cluster.gpus_per_machine,
+                    internode_bw=self.fabric.share_of(job.job_id),
+                    plan=job.plan)
+            else:
+                it, exposed = self.comm.iteration_time(
+                    job.model, job.compute_time_per_iter, job.placement,
+                    self.cluster.machines_per_rack,
+                    self.cluster.gpus_per_machine, plan=job.plan)
+            it *= job.slow_factor
+            if factor != 1.0:
+                it *= factor
+            if it == job.iter_time:
+                continue
+            if now > job.run_start:
+                self._progress(job, now)
+            job.iter_time = it
+            job.exposed_comm_per_iter = exposed
+            v = self._completion_version[job.job_id] + 1
+            self._completion_version[job.job_id] = v
+            remaining = max(job.remaining_iters() - job.iters_frac, 0.0)
+            self._push(max(job.run_start, now) + remaining * it,
+                       COMPLETE, (job.job_id, v))
+            self.n_degrade_reprices += 1
+        if prof is not None:
+            prof.add("reprice_degraded", perf_counter() - t0)
+
+    def _record_telemetry(self, t: float):
+        """Sample the per-machine/per-link series (telemetry enabled
+        only).  Busy GPUs are derived from the running jobs' allocations,
+        which sum exactly to the Timeline's aggregate busy count (busy =
+        total - free - failed, and failed machines hold no allocations);
+        each job's iteration throughput is split across its machines by
+        GPU share."""
+        tel = self.telemetry
+        idx = self._telemetry_index
+        busy = [0] * len(tel.machines)
+        rate = [0.0] * len(tel.machines)
+        for job in self.running:
+            it = job.iter_time
+            for m, c in job.placement.alloc:
+                i = idx[m]
+                busy[i] += c
+                if it > 0.0:
+                    rate[i] += (c / job.n_gpus) / it
+        link_bw = {}
+        if self.fabric is not None:
+            for link in self._telemetry_links:
+                link_bw[link_key(link)] = \
+                    self.fabric.effective_bandwidth(link)
+        tel.record(t, busy, rate, link_bw)
 
     # ------------------------------------------------------------------
     def run(self, max_time: float = float("inf")) -> Dict:
@@ -714,6 +858,11 @@ class ClusterSimulator:
                         - self.cluster.failed_gpus(),
                         self.cluster.total_gpus,
                         len(self.waiting) + len(self.running))
+                    if self.telemetry is not None:
+                        # the telemetry horizon sample mirrors (and is
+                        # gated exactly like) the Timeline's, keeping the
+                        # two series aligned sample-for-sample
+                        self._record_telemetry(self.clock)
                 break
             self._step()
         return self.results()
@@ -840,6 +989,28 @@ class ClusterSimulator:
                 self.cluster.recover_machine(payload)
                 self._op("machine_recover", t, machine=payload)
                 self._churn_dirty = True
+        elif kind == DEGRADE:
+            dkind, target, factor = payload
+            self.n_degrade_events += 1
+            if dkind == "machine":
+                if factor == 1.0:
+                    self.machine_degrade.pop(target, None)
+                else:
+                    self.machine_degrade[target] = factor
+                # queue the machine's current residents for a re-price
+                # (drained at the tail, coalesced over same-instant
+                # bursts); recoveries queue too — the factor must come
+                # back DOWN for jobs riding out the episode
+                for job in self._jobs_on_machine.get(target, {}).values():
+                    self._degrade_due[job.job_id] = job
+            elif self.fabric is not None:
+                # link derating composes with fair-share contention
+                # inside the fabric's _capacity seam; affected members
+                # re-price through the ordinary fabric path below.
+                # Without a fabric there is no link to derate — the
+                # scenario layer rejects that combination up front.
+                if self.fabric.set_derate(target, factor):
+                    self._fabric_dirty = True
         if self._churn_dirty and not (
                 self.events and self.events[0][0] == t
                 and self.events[0][1] in (FAIL, RECOVER)):
@@ -858,6 +1029,17 @@ class ClusterSimulator:
         if self._fabric_dirty:
             self._fabric_dirty = False
             self._reprice(t)
+        if self._degrade_due and not (
+                self.events and self.events[0][0] == t
+                and self.events[0][1] == DEGRADE):
+            # straggler re-price once per same-instant DEGRADE burst,
+            # after the fabric re-price settled the link loads
+            self._reprice_degraded(t)
+        if self.telemetry is not None and kind == ROUND:
+            # sampled at the tail so the tick's re-prices are reflected;
+            # occupancy hasn't changed since the Timeline sample above,
+            # so the per-machine busy rows sum exactly to it
+            self._record_telemetry(t)
         if self.event_hook is not None:
             self.event_hook(self, kind)
         if not self.events and (self.waiting or self.running):
@@ -924,6 +1106,15 @@ class ClusterSimulator:
             # only under a failure schedule, for the same reason
             out["n_machine_failures"] = self.n_machine_failures
             out["n_job_failures"] = self.n_job_failures
+        if self._degradation_enabled:
+            # only under a degradation schedule, for the same reason
+            out["n_degrade_events"] = self.n_degrade_events
+            out["n_degrade_reprices"] = self.n_degrade_reprices
+            out["n_straggler_evictions"] = self.n_straggler_evictions
+        if self.telemetry is not None:
+            # opt-in Kalos-style per-interval series (schema-stamped wire
+            # form; see repro.core.telemetry)
+            out["telemetry"] = self.telemetry.as_dict()
         if self.wedged:
             # the run terminated with jobs that can provably never place
             # again (failure-schedule tail left the capacity short); only

@@ -408,6 +408,192 @@ def make_rolling_maintenance(machine_ids: Sequence[int], **kw) -> list:
 
 
 # ---------------------------------------------------------------------------
+# Analog degradation schedules (stragglers, slow NICs, flapping uplinks)
+# ---------------------------------------------------------------------------
+# Binary dead/alive churn misses how real clusters mostly hurt you: analog
+# performance faults.  Large-scale trace studies (Hu et al., 2021) document
+# straggler GPUs and thermally-throttled machines that run slow rather than
+# die, and degraded/flapping links that shrink effective bandwidth without
+# ever dropping.  A degradation schedule is a sorted list of
+# (t, "machine"|"link", target, factor) events consumed by
+# ``ClusterSimulator(degradation_events=)``:
+#
+# * "machine" events multiply the iteration time of every job touching the
+#   machine by ``factor`` (>= 1.0); factor 1.0 is the recovery.
+# * "link" events derate a fabric link's capacity to ``factor`` (<= 1.0)
+#   of nominal; factor 1.0 restores it.  Targets use the topology's link
+#   keys (("uplink", rack) — the spine never degrades here).
+#
+# Every degradation ALWAYS carries its matching recovery (possibly past the
+# horizon), mirroring the failure-schedule invariant above, and the same
+# seed (and target list) yields a byte-identical schedule.
+
+DEGRADATION_MODES = (None, "stragglers", "slow-nics", "flapping-uplinks",
+                     "mixed")
+
+STRAGGLER_DEFAULTS = dict(
+    mtbd=12 * 3600.0,        # mean healthy time between episodes, per machine
+    duration=2 * 3600.0,     # mean episode length
+    factor_min=1.3,          # sampled iteration-time multiplier range
+    factor_max=2.5,
+    horizon=7 * 24 * 3600.0,  # no new episodes after this
+    scope=0.25,              # fraction of machines that ever straggle
+)
+SLOW_NIC_DEFAULTS = dict(
+    start=0.0,               # derating begins here
+    derate=0.5,              # fraction of nominal uplink bandwidth retained
+    scope=0.25,              # fraction of racks with slow uplinks
+    horizon=7 * 24 * 3600.0,  # recovery (back to nominal) lands here
+)
+FLAPPING_DEFAULTS = dict(
+    mtbf=4 * 3600.0,         # mean healthy time per uplink
+    mttr=1800.0,             # mean degraded time per flap
+    derate=0.25,             # bandwidth fraction retained while degraded
+    scope=0.25,              # fraction of racks that ever flap
+    horizon=7 * 24 * 3600.0,
+)
+MIXED_DEFAULTS = dict(
+    machine_scope=0.25,      # straggler scope (machine axis)
+    link_scope=0.25,         # flapping-uplink scope (link axis)
+    horizon=7 * 24 * 3600.0,
+)
+
+
+def resolve_degradation_kw(mode: str, kw: Optional[dict] = None) -> dict:
+    """Mode defaults merged with overrides; unknown keys are an error —
+    same contract as ``resolve_failure_kw`` (a typo'd knob silently
+    falling back to its default would corrupt artifact provenance)."""
+    defaults = {"stragglers": STRAGGLER_DEFAULTS,
+                "slow-nics": SLOW_NIC_DEFAULTS,
+                "flapping-uplinks": FLAPPING_DEFAULTS,
+                "mixed": MIXED_DEFAULTS}.get(mode)
+    if defaults is None:
+        raise ValueError(
+            f"unknown degradation mode {mode!r}; known: "
+            f"{', '.join(str(m) for m in DEGRADATION_MODES)}")
+    kw = dict(kw or {})
+    unknown = set(kw) - set(defaults)
+    if unknown:
+        raise ValueError(
+            f"unknown degradation_kw keys for mode {mode!r}: "
+            f"{', '.join(sorted(unknown))}; known: "
+            f"{', '.join(sorted(defaults))}")
+    return {**defaults, **kw}
+
+
+def _degradation_events(windows: list) -> list:
+    """[(start, end, dkind, target, factor)] -> the sorted
+    (t, dkind, target, factor) event stream, recovery (factor 1.0)
+    emitted at each window's end.
+
+    Per-target windows that touch or overlap merge into one continuous
+    episode (keeping the harsher factor) for the same reason
+    ``_events_from_windows`` merges: a recovery coinciding with the same
+    target's next onset must not annihilate the second episode."""
+    by_target: dict = {}
+    for s, e, dkind, target, factor in windows:
+        by_target.setdefault((dkind, target), []).append((s, e, factor))
+    events = []
+    for (dkind, target), ws in by_target.items():
+        ws.sort()
+        cur_s, cur_e, cur_f = ws[0]
+        merged = []
+        for s, e, f in ws[1:]:
+            if s <= cur_e:
+                cur_e = max(cur_e, e)
+                # harsher = further from 1.0 on either side of it
+                cur_f = f if abs(f - 1.0) > abs(cur_f - 1.0) else cur_f
+            else:
+                merged.append((cur_s, cur_e, cur_f))
+                cur_s, cur_e, cur_f = s, e, f
+        merged.append((cur_s, cur_e, cur_f))
+        for s, e, f in merged:
+            events.append((s, dkind, target, f))
+            events.append((e, dkind, target, 1.0))
+    events.sort(key=lambda ev: (ev[0], ev[1], str(ev[2]), ev[3]))
+    return events
+
+
+def make_straggler_degradations(machine_ids: Sequence[int], seed: int = 0,
+                                **kw) -> list:
+    """Seeded straggler/throttling process: each in-scope machine
+    alternates exponential healthy times (mean ``mtbd``) and exponential
+    degraded episodes (mean ``duration``) until ``horizon``; each episode
+    samples its compute-slowdown factor uniformly from
+    [``factor_min``, ``factor_max``].  Same seed -> byte-identical."""
+    p = resolve_degradation_kw("stragglers", kw)
+    rng = random.Random(seed + 70_000)
+    machine_ids = list(machine_ids)
+    if p["scope"] < 1.0:
+        k = max(1, int(p["scope"] * len(machine_ids)))
+        machine_ids = sorted(rng.sample(machine_ids, k))
+    windows = []
+    for m in machine_ids:
+        t = rng.expovariate(1.0 / p["mtbd"])
+        while t < p["horizon"]:
+            dur = rng.expovariate(1.0 / p["duration"])
+            factor = rng.uniform(p["factor_min"], p["factor_max"])
+            windows.append((t, t + dur, "machine", m, factor))
+            t += dur + rng.expovariate(1.0 / p["mtbd"])
+    return _degradation_events(windows)
+
+
+def make_slow_nic_degradations(rack_ids: Sequence[int], seed: int = 0,
+                               **kw) -> list:
+    """Seeded slow-NIC derating: a seeded ``scope`` subset of rack
+    uplinks runs at ``derate`` x nominal bandwidth from ``start`` until
+    ``horizon`` (one long window per afflicted uplink — the chronic
+    hardware-lemon case, not a transient)."""
+    p = resolve_degradation_kw("slow-nics", kw)
+    rng = random.Random(seed + 75_000)
+    rack_ids = list(rack_ids)
+    if p["scope"] < 1.0:
+        k = max(1, int(p["scope"] * len(rack_ids)))
+        rack_ids = sorted(rng.sample(rack_ids, k))
+    windows = [(p["start"], p["horizon"], "link", ("uplink", r), p["derate"])
+               for r in rack_ids]
+    return _degradation_events(windows)
+
+
+def make_flapping_uplink_degradations(rack_ids: Sequence[int], seed: int = 0,
+                                      **kw) -> list:
+    """Seeded flapping uplinks: each in-scope rack uplink alternates
+    exponential healthy times (mean ``mtbf``) and exponential degraded
+    windows (mean ``mttr``) at ``derate`` x nominal bandwidth, until
+    ``horizon``."""
+    p = resolve_degradation_kw("flapping-uplinks", kw)
+    rng = random.Random(seed + 80_000)
+    rack_ids = list(rack_ids)
+    if p["scope"] < 1.0:
+        k = max(1, int(p["scope"] * len(rack_ids)))
+        rack_ids = sorted(rng.sample(rack_ids, k))
+    windows = []
+    for r in rack_ids:
+        t = rng.expovariate(1.0 / p["mtbf"])
+        while t < p["horizon"]:
+            down = rng.expovariate(1.0 / p["mttr"])
+            windows.append((t, t + down, "link", ("uplink", r), p["derate"]))
+            t += down + rng.expovariate(1.0 / p["mtbf"])
+    return _degradation_events(windows)
+
+
+def make_mixed_degradations(machine_ids: Sequence[int],
+                            rack_ids: Sequence[int], seed: int = 0,
+                            **kw) -> list:
+    """Stragglers + flapping uplinks together (the fig16 churn regime).
+    Composes the two single-axis makers at their own seed offsets, so a
+    mixed schedule's machine axis is byte-identical to the stand-alone
+    straggler schedule at the same seed and scope."""
+    p = resolve_degradation_kw("mixed", kw)
+    events = make_straggler_degradations(
+        machine_ids, seed, scope=p["machine_scope"], horizon=p["horizon"])
+    events += make_flapping_uplink_degradations(
+        rack_ids, seed, scope=p["link_scope"], horizon=p["horizon"])
+    events.sort(key=lambda ev: (ev[0], ev[1], str(ev[2]), ev[3]))
+    return events
+
+
+# ---------------------------------------------------------------------------
 # CSV trace replay (Philly / Helios-style)
 # ---------------------------------------------------------------------------
 

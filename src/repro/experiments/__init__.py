@@ -1,11 +1,13 @@
 """Experiment orchestration: declarative scenarios, a deterministic
 single-cell runner, and a process-parallel sweep (see docs/experiments.md).
 """
+from .faults import FaultSpec  # noqa: F401
 from .runner import (  # noqa: F401
     ARTIFACT_SCHEMA,
     ARTIFACT_SCHEMA_V2,
     ARTIFACT_SCHEMA_V3,
     ARTIFACT_SCHEMA_V4,
+    ARTIFACT_SCHEMA_V5,
     SimOverrides,
     artifact_json,
     run_one,

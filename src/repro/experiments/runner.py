@@ -15,6 +15,7 @@ from typing import Any, Mapping, Optional, Sequence, Union
 
 from repro.core import CommModel
 
+from .faults import FaultSpec
 from .scenario import Scenario, get_scenario
 
 ARTIFACT_SCHEMA = "repro.experiments.artifact/v1"
@@ -30,8 +31,15 @@ ARTIFACT_SCHEMA_V3 = "repro.experiments.artifact/v3"
 # v4 = v3 + machine failure/churn provenance (config.failure_mode /
 # failure_kw with the mode defaults resolved) and metrics
 # .n_machine_failures / .n_job_failures.  Emitted only when a scenario's
-# failure_mode is set: failure-off cells keep their v1/v2/v3 bytes.
+# failure mode is set: failure-off cells keep their v1/v2/v3 bytes.
 ARTIFACT_SCHEMA_V4 = "repro.experiments.artifact/v4"
+# v5 = v4 + analog degradation provenance (config.degradation /
+# degradation_kw, resolved) and metrics .n_degrade_events /
+# .n_degrade_reprices / .n_straggler_evictions, plus the opt-in
+# metrics.telemetry time-series (config.telemetry).  Emitted only when a
+# scenario's FaultSpec enables degradation or telemetry: every other cell
+# keeps its v1-v4 bytes.
+ARTIFACT_SCHEMA_V5 = "repro.experiments.artifact/v5"
 
 # volatile keys excluded from determinism comparisons (populated by callers,
 # never by run_one itself)
@@ -63,12 +71,34 @@ class SimOverrides:
     max_time: Optional[float] = None
     contention: Optional[str] = None
     parallelism: Optional[str] = None
+    # the consolidated fault surface (churn mode + knobs, analog
+    # degradation, telemetry) — see repro.experiments.faults.FaultSpec
+    faults: Optional[FaultSpec] = None
+    # DEPRECATED: the pre-FaultSpec failure switch, folded into `faults`
+    # at construction (DeprecationWarning); post-fold it reads as None
     failures: Optional[str] = None
     naive_topology: bool = False
     comm: Optional[CommModel] = None
     archs: Optional[Sequence[Any]] = None
 
     _RUNTIME_ONLY = ("comm", "archs")
+
+    def __post_init__(self):
+        if self.failures is None:
+            return
+        warnings.warn(
+            "legacy failure kwarg: SimOverrides.failures is deprecated, "
+            "pass faults=FaultSpec(mode=...)",
+            DeprecationWarning, stacklevel=3)
+        if self.faults is not None and self.faults.mode is not None:
+            raise TypeError(
+                "both SimOverrides.faults.mode and the legacy failures= "
+                "were given — pass one")
+        spec = FaultSpec(mode=self.failures)
+        if self.faults is not None:  # keep the spec's degradation axis
+            spec = spec.merged_over(self.faults)
+        object.__setattr__(self, "faults", spec)
+        object.__setattr__(self, "failures", None)
 
     def to_dict(self) -> dict:
         """Wire form: only non-default serializable fields.  Runtime-only
@@ -80,10 +110,13 @@ class SimOverrides:
                     f"SimOverrides.{name} is runtime-only (a live Python "
                     "object) and cannot be serialized; inject it in-process "
                     "instead")
-        return {f.name: getattr(self, f.name)
-                for f in dataclasses.fields(self)
-                if f.name not in self._RUNTIME_ONLY
-                and getattr(self, f.name) != f.default}
+        out = {f.name: getattr(self, f.name)
+               for f in dataclasses.fields(self)
+               if f.name not in self._RUNTIME_ONLY
+               and getattr(self, f.name) != f.default}
+        if "faults" in out:
+            out["faults"] = out["faults"].to_dict()
+        return out
 
     @classmethod
     def from_dict(cls, d: Optional[Mapping] = None) -> "SimOverrides":
@@ -98,6 +131,8 @@ class SimOverrides:
             raise ValueError(
                 f"SimOverrides field(s) {', '.join(runtime)} are "
                 "runtime-only and cannot come from serialized data")
+        if isinstance(d.get("faults"), Mapping):
+            d["faults"] = FaultSpec.from_dict(d["faults"])
         return cls(**d)
 
     def scenario_kw(self) -> dict:
@@ -105,7 +140,7 @@ class SimOverrides:
         are ignored there, so defaults never clobber scenario fields)."""
         return dict(n_racks=self.n_racks, n_jobs=self.n_jobs,
                     max_time=self.max_time, contention_mode=self.contention,
-                    parallelism=self.parallelism, failure_mode=self.failures)
+                    parallelism=self.parallelism, faults=self.faults)
 
 
 _DEFAULT_OVERRIDES = SimOverrides()
@@ -170,7 +205,10 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
     sim = scenario.build_sim(archs, policy=policy, seed=seed, comm=ov.comm,
                              naive_topology=ov.naive_topology)
     metrics = sim.run(max_time=scenario.max_time)
-    if scenario.failure_mode:
+    f = scenario.faults
+    if f is not None and (f.degradation or f.telemetry):
+        schema = ARTIFACT_SCHEMA_V5
+    elif f is not None and f.mode:
         schema = ARTIFACT_SCHEMA_V4
     elif scenario.parallelism or scenario.checkpoint_overhead:
         schema = ARTIFACT_SCHEMA_V3

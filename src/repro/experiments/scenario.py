@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, Mapping, Optional, Tuple
 
@@ -35,11 +36,18 @@ from repro.core.policies import make_policy
 from repro.core.trace import (
     FAILURE_MODES,
     PARALLELISM_MODES,
+    make_flapping_uplink_degradations,
+    make_mixed_degradations,
     make_mtbf_failures,
     make_rolling_maintenance,
+    make_slow_nic_degradations,
+    make_straggler_degradations,
+    resolve_degradation_kw,
     resolve_failure_kw,
 )
 from repro.types import PROFILES
+
+from .faults import FaultSpec
 
 CONTENTION_MODES = (None, "fair-share")
 
@@ -111,11 +119,14 @@ class Scenario:
     # hybrid-parallelism plans: None (pure DP, v1-identical) or "auto"
     # (per-job DP/TP/PP/EP plans derived from model family and demand)
     parallelism: Optional[str] = None
-    # machine failure/maintenance churn: None (machines never die, legacy-
-    # identical), "mtbf" (seeded exponential fail/repair per machine) or
-    # "maintenance" (deterministic rolling-batch downtime windows);
-    # failure_kw overrides the mode's default knobs (see
-    # repro.core.trace.MTBF_DEFAULTS / MAINTENANCE_DEFAULTS)
+    # every way the cluster hurts: binary machine churn (mode/knobs),
+    # analog degradation (stragglers / slow NICs / flapping uplinks) and
+    # opt-in telemetry — see repro.experiments.faults.FaultSpec.  None =
+    # nothing ever goes wrong (legacy-identical).
+    faults: Optional[FaultSpec] = None
+    # DEPRECATED: legacy failure kwargs, folded into `faults` at
+    # construction (DeprecationWarning).  Post-fold both read as unset,
+    # so dataclasses.replace never re-warns.
     failure_mode: Optional[str] = None
     failure_kw: Mapping[str, Any] = field(default_factory=dict)
     # defaults for the simulation
@@ -126,23 +137,57 @@ class Scenario:
     # (0.0 keeps legacy artifacts byte-identical)
     checkpoint_overhead: float = 0.0
 
+    def __post_init__(self):
+        if self.failure_mode is None and not self.failure_kw:
+            return
+        warnings.warn(
+            "legacy failure kwarg: Scenario(failure_mode=/failure_kw=) is "
+            "deprecated, pass faults=FaultSpec(mode=..., knobs=...)",
+            DeprecationWarning, stacklevel=3)
+        if self.faults is not None and self.faults.mode is not None:
+            raise TypeError(
+                f"scenario {self.name!r}: both faults.mode and the legacy "
+                "failure_mode/failure_kw were given — pass one")
+        legacy = FaultSpec(mode=self.failure_mode,
+                           knobs=dict(self.failure_kw))
+        if self.faults is not None:  # keep the spec's degradation axis
+            legacy = legacy.merged_over(self.faults)
+        object.__setattr__(self, "faults", legacy)
+        object.__setattr__(self, "failure_mode", None)
+        object.__setattr__(self, "failure_kw", {})
+
     # -- builders -------------------------------------------------------
     def with_overrides(self, **kw) -> "Scenario":
         """A copy with the given fields replaced (None values ignored).
         An explicit n_racks override wins over heterogeneous rack_sizes —
         the result is a uniform cluster of that many racks (otherwise the
         override would be silently ignored while still being recorded in
-        the artifact's provenance).  A failure_mode override that SWITCHES
-        mode drops the scenario's failure_kw: the old mode's knobs (e.g.
-        mtbf/mttr under "maintenance") would otherwise be rejected as
-        unknown, aborting the documented "--failures overrides every
-        scenario" sweep on any scenario that tunes its own churn."""
+        the artifact's provenance).  A ``faults`` override merges axis-
+        wise over the scenario's own spec (``FaultSpec.merged_over``): a
+        mode switch drops the scenario's knobs — they belong to the other
+        mode's schema, and the documented "--failures overrides every
+        scenario" sweep must not abort on a scenario that tunes its own
+        churn.  The legacy ``failure_mode``/``failure_kw`` keys are
+        accepted with a DeprecationWarning and converted."""
         kw = {k: v for k, v in kw.items() if v is not None}
         if kw.get("n_racks") is not None and self.rack_sizes is not None:
             kw.setdefault("rack_sizes", None)
-        if (kw.get("failure_mode") is not None
-                and kw["failure_mode"] != self.failure_mode):
-            kw.setdefault("failure_kw", {})
+        if "failure_mode" in kw or "failure_kw" in kw:
+            warnings.warn(
+                "legacy failure kwarg: with_overrides(failure_mode=/"
+                "failure_kw=) is deprecated, pass faults=FaultSpec(...)",
+                DeprecationWarning, stacklevel=2)
+            if kw.get("faults") is not None:
+                raise TypeError(
+                    "both faults= and the legacy failure_mode/failure_kw "
+                    "were given — pass one")
+            mode = kw.pop("failure_mode", None)
+            knobs = kw.pop("failure_kw", None) or {}
+            if mode is None and self.faults is not None:
+                mode = self.faults.mode  # knob-only override of the mode
+            kw["faults"] = FaultSpec(mode=mode, knobs=knobs)
+        if kw.get("faults") is not None:
+            kw["faults"] = kw["faults"].merged_over(self.faults)
         return dataclasses.replace(self, **kw) if kw else self
 
     def build_cluster(self, naive_topology: bool = False) -> ClusterTopology:
@@ -212,19 +257,40 @@ class Scenario:
         ``machine_ids`` must be the machines that actually hold GPUs
         (failing a ghost stride slot of a heterogeneous topology would
         silently dilute the effective churn)."""
-        if self.failure_mode is None:
+        mode = self.faults.mode if self.faults is not None else None
+        if mode is None:
             return None
-        if self.failure_mode not in FAILURE_MODES:
+        if mode not in FAILURE_MODES:
             raise ValueError(
-                f"scenario {self.name!r}: unknown failure_mode "
-                f"{self.failure_mode!r}; known: "
-                f"{', '.join(str(m) for m in FAILURE_MODES)}")
-        kw = dict(self.failure_kw)
-        if self.failure_mode == "mtbf":
+                f"scenario {self.name!r}: unknown failure mode {mode!r}; "
+                f"known: {', '.join(str(m) for m in FAILURE_MODES)}")
+        kw = dict(self.faults.knobs)
+        if mode == "mtbf":
             return make_mtbf_failures(machine_ids, seed=seed, **kw)
         # "maintenance" draws nothing from the seed: the schedule is a
         # pure function of the machine list (rolling windows)
         return make_rolling_maintenance(machine_ids, **kw)
+
+    def build_degradations(self, machine_ids, rack_ids, seed: int):
+        """The cell's analog degradation schedule, or None when off.
+        Same ``machine_ids`` contract as :meth:`build_failures`;
+        ``rack_ids`` are the racks whose uplinks may derate."""
+        mode = self.faults.degradation if self.faults is not None else None
+        if mode is None:
+            return None
+        kw = dict(self.faults.degradation_kw)
+        if mode == "stragglers":
+            return make_straggler_degradations(machine_ids, seed=seed, **kw)
+        if mode == "slow-nics":
+            return make_slow_nic_degradations(rack_ids, seed=seed, **kw)
+        if mode == "flapping-uplinks":
+            return make_flapping_uplink_degradations(rack_ids, seed=seed,
+                                                     **kw)
+        if mode == "mixed":
+            return make_mixed_degradations(machine_ids, rack_ids,
+                                           seed=seed, **kw)
+        raise ValueError(  # FaultSpec validates; direct field poking lands here
+            f"scenario {self.name!r}: unknown degradation mode {mode!r}")
 
     def build_trace(self, archs, seed: int):
         if self.parallelism not in PARALLELISM_MODES:
@@ -266,10 +332,21 @@ class Scenario:
         # excluding the empty stride slots of heterogeneous topologies
         real = [m for m in range(cluster.n_machines)
                 if cluster.free[m] > 0]
+        rack_ids = sorted({m // cluster.machines_per_rack for m in real})
         events = list(self.slowdown_events)
         if self.contention is not None:
             events += self.contention.events(real, seed)
         comm = comm or self.build_comm(archs)
+        fabric = self.build_fabric(cluster, comm)
+        degradations = self.build_degradations(real, rack_ids, seed)
+        if degradations is not None and fabric is None \
+                and any(d[1] == "link" for d in degradations):
+            raise ValueError(
+                f"scenario {self.name!r}: link-derating degradation "
+                f"({self.faults.degradation!r}) requires "
+                "contention_mode='fair-share' — without a shared fabric "
+                "there is no link bandwidth to derate")
+        telemetry = bool(self.faults.telemetry) if self.faults else False
         sim = ClusterSimulator(cluster,
                                make_policy(policy or self.policy),
                                comm,
@@ -277,7 +354,9 @@ class Scenario:
                                checkpoint_overhead=self.checkpoint_overhead,
                                slowdown_events=events or None,
                                failure_events=self.build_failures(real, seed),
-                               fabric=self.build_fabric(cluster, comm))
+                               degradation_events=degradations,
+                               fabric=fabric,
+                               telemetry=telemetry)
         if submit_trace:
             for job in self.build_trace(archs, seed):
                 sim.submit(job)
@@ -326,11 +405,21 @@ class Scenario:
             out["checkpoint_overhead"] = self.checkpoint_overhead
         # schema-v4 keys: like the fabric capacities, the RESOLVED failure
         # knobs are recorded (defaults merged), so the artifact pins the
-        # simulated churn even if the mode's defaults change later
-        if self.failure_mode is not None:
-            out["failure_mode"] = self.failure_mode
-            out["failure_kw"] = resolve_failure_kw(self.failure_mode,
-                                                   dict(self.failure_kw))
+        # simulated churn even if the mode's defaults change later.  The
+        # key NAMES predate FaultSpec and stay — v4 artifacts must remain
+        # byte-identical.
+        f = self.faults
+        if f is not None and f.mode is not None:
+            out["failure_mode"] = f.mode
+            out["failure_kw"] = resolve_failure_kw(f.mode, dict(f.knobs))
+        # schema-v5 keys (analog degradation + telemetry), same contract:
+        # resolved knobs, emitted only when the features are on
+        if f is not None and f.degradation is not None:
+            out["degradation"] = f.degradation
+            out["degradation_kw"] = resolve_degradation_kw(
+                f.degradation, dict(f.degradation_kw))
+        if f is not None and f.telemetry:
+            out["telemetry"] = True
         return out
 
 
@@ -522,17 +611,17 @@ register(Scenario(
     description="paper-batch under seeded MTBF/MTTR machine churn (24h "
     "MTBF, 2h MTTR per machine: one failure somewhere every ~20 min) with "
     "a 2-minute checkpoint-restore surcharge per lost placement",
-    failure_mode="mtbf",
-    failure_kw={"mtbf": 24 * 3600.0, "mttr": 2 * 3600.0},
+    faults=FaultSpec(mode="mtbf",
+                     knobs={"mtbf": 24 * 3600.0, "mttr": 2 * 3600.0}),
     checkpoint_overhead=120.0,
     trace="batch", n_jobs=400))
 register(Scenario(
     "rolling-maintenance",
     description="deterministic rolling maintenance: half-rack batches of "
     "4 machines down for 1h each, back to back, two full passes",
-    failure_mode="maintenance",
-    failure_kw={"start": 4 * 3600.0, "window": 3600.0, "batch_size": 4,
-                "rounds": 2},
+    faults=FaultSpec(mode="maintenance",
+                     knobs={"start": 4 * 3600.0, "window": 3600.0,
+                            "batch_size": 4, "rounds": 2}),
     trace="batch", n_jobs=400))
 register(Scenario(
     "hotspot-flaky",
@@ -540,7 +629,45 @@ register(Scenario(
     "cycle, on a congested fair-share spine: churn and endogenous "
     "contention compound",
     contention_mode="fair-share", spine_bw=50e9,
-    failure_mode="mtbf",
-    failure_kw={"mtbf": 8 * 3600.0, "mttr": 1800.0, "scope": 0.25},
+    faults=FaultSpec(mode="mtbf",
+                     knobs={"mtbf": 8 * 3600.0, "mttr": 1800.0,
+                            "scope": 0.25}),
     checkpoint_overhead=120.0,
+    trace="batch", n_jobs=300))
+
+# -- analog degradation (stragglers / slow NICs / flapping links, schema v5) --
+# Real clusters mostly hurt you analog (Hu et al. 2021): machines that run
+# slow rather than die, links that shrink rather than drop.  These cells
+# stress the continuous performance-fault subsystem — straggler re-pricing,
+# link derating composed with fair-share contention, and dally's
+# evict-or-tolerate reaction.  fig16 measures the mixed regime.
+register(Scenario(
+    "straggler-degradation",
+    description="paper-batch under seeded straggler/throttling episodes: "
+    "a quarter of the machines intermittently run 1.3-2.5x slow (12h "
+    "mean healthy time, 2h mean episode)",
+    faults=FaultSpec(degradation="stragglers"),
+    trace="batch", n_jobs=400))
+register(Scenario(
+    "slow-nics",
+    description="chronic hardware lemons on a fair-share fabric: a seeded "
+    "quarter of the rack uplinks run at half bandwidth for the whole run",
+    contention_mode="fair-share", spine_bw=50e9,
+    faults=FaultSpec(degradation="slow-nics"),
+    trace="batch", n_jobs=400))
+register(Scenario(
+    "flapping-uplinks",
+    description="flapping rack uplinks on a fair-share fabric: a seeded "
+    "quarter of the uplinks intermittently derate to 25% bandwidth "
+    "(4h mean healthy time, 30min mean flap)",
+    contention_mode="fair-share", spine_bw=50e9,
+    faults=FaultSpec(degradation="flapping-uplinks"),
+    trace="batch", n_jobs=400))
+register(Scenario(
+    "degraded-cluster",
+    description="the fig16 regime: stragglers + flapping uplinks together "
+    "on a congested fair-share spine — analog churn on both the compute "
+    "and the network axis",
+    contention_mode="fair-share", spine_bw=50e9,
+    faults=FaultSpec(degradation="mixed"),
     trace="batch", n_jobs=300))

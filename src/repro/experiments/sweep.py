@@ -22,6 +22,7 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import List, Optional, Sequence, Tuple
 
+from .faults import FaultSpec
 from .runner import SimOverrides, artifact_json, run_one
 from .scenario import SCENARIOS, get_scenario, scenario_from_csv
 
@@ -61,6 +62,7 @@ def _run_cell(task: Task, out_dir: str) -> dict:
         "p99_jct": m["jct"]["p99"],
         "avg_utilization": m["avg_utilization"],
         "n_finished": m["n_finished"],
+        "wedged": bool(m.get("wedged", False)),
         "wall_s": time.time() - t0,
     }
 
@@ -73,15 +75,20 @@ def sweep(scenarios: Sequence[str], policies: Sequence[str],
           contention: Optional[str] = None,
           parallelism: Optional[str] = None,
           failures: Optional[str] = None,
+          degradation: Optional[str] = None,
+          telemetry: bool = False,
           naive_topology: bool = False) -> dict:
     """Run the full cross product and return the index dict."""
     out_dir = pathlib.Path(out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
+    faults = (FaultSpec(mode=failures, degradation=degradation,
+                        telemetry=telemetry)
+              if (failures or degradation or telemetry) else None)
     # naive_topology is an implementation A/B (fig14 reference): artifacts
     # stay identical, so only the index records that the slow path was timed
     overrides = SimOverrides(n_jobs=n_jobs, n_racks=n_racks,
                              max_time=max_time, contention=contention,
-                             parallelism=parallelism, failures=failures,
+                             parallelism=parallelism, faults=faults,
                              naive_topology=naive_topology).to_dict()
     tasks: List[Task] = [
         (sc, csv if (csv and get_scenario(sc).trace == "csv") else None,
@@ -141,6 +148,14 @@ def main(argv=None) -> None:
                     choices=["mtbf", "maintenance"],
                     help="enable machine failure/maintenance churn for "
                     "every scenario (schema v4 artifacts)")
+    ap.add_argument("--degradation", default=None,
+                    choices=["stragglers", "slow-nics", "flapping-uplinks",
+                             "mixed"],
+                    help="enable analog degradation faults for every "
+                    "scenario (schema v5 artifacts)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record the Kalos-style per-interval telemetry "
+                    "time-series in every artifact (schema v5)")
     ap.add_argument("--naive-topology", action="store_true",
                     help="time every cell on the retained linear-scan "
                     "topology (identical artifacts, pre-indexing wall "
@@ -163,12 +178,14 @@ def main(argv=None) -> None:
         seeds, workers=args.workers, out_dir=args.out, csv=args.csv,
         n_jobs=args.n_jobs, n_racks=args.racks, max_time=args.max_time,
         contention=args.contention, parallelism=args.parallelism,
-        failures=args.failures, naive_topology=args.naive_topology)
+        failures=args.failures, degradation=args.degradation,
+        telemetry=args.telemetry, naive_topology=args.naive_topology)
     for r in index["runs"]:
         print(f"{r['scenario']:>18s} {r['policy']:>22s} seed{r['seed']} "
               f"makespan={r['makespan']/3600:8.1f}h "
               f"avg_jct={r['avg_jct']/3600:7.2f}h "
-              f"util={r['avg_utilization']:4.2f} wall={r['wall_s']:5.1f}s")
+              f"util={r['avg_utilization']:4.2f} wall={r['wall_s']:5.1f}s"
+              + (" WEDGED" if r.get("wedged") else ""))
     print(f"sweep.total_wall_seconds,{index['total_wall_s']:.1f},"
           f"workers={index['workers']} cells={len(index['runs'])}")
 

@@ -365,6 +365,10 @@ class SchedulerService:
             "n_finished": len(sim.finished),
             "n_rejected": len(sim.rejected),
         }
+        if sim.telemetry is not None:
+            # most recent per-machine busy/throughput + per-link effective
+            # bandwidth sample (empty dicts before the first ROUND tick)
+            state["telemetry"] = sim.telemetry.latest()
         tuner = getattr(sim.policy, "tuner", None)
         if tuner is not None:
             demands = sorted({j.n_gpus for j in sim.waiting})

@@ -1,0 +1,441 @@
+"""Analog degradation faults + telemetry: schedule generators, fabric
+derating, straggler re-pricing exactness, dally's straggler reaction,
+schema-v5 threading, and the degradation-off byte-identity guarantee.
+
+The FaultSpec API surface (wire form, legacy shims, merge semantics)
+lives in tests/test_api_surface.py; the pre-existing golden digests that
+pin degradation-off runs byte-identical live in
+tests/test_golden_artifacts.py."""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core import (ClusterSimulator, ClusterTopology, CommModel,
+                        FairShareFabric, Job,
+                        make_flapping_uplink_degradations,
+                        make_mixed_degradations,
+                        make_slow_nic_degradations,
+                        make_straggler_degradations,
+                        resolve_degradation_kw)
+from repro.core.policies import make_policy
+from repro.core.topology import Placement
+from repro.core.trace import _degradation_events
+from repro.experiments import FaultSpec, SimOverrides, artifact_json, run_one
+from repro.experiments.sweep import sweep
+
+ARCHS_L = list(ARCHS.values())
+COMM = CommModel.from_configs(ARCHS_L)
+NIC = 25e9
+
+
+# -- schedule generators -----------------------------------------------------
+
+def test_straggler_schedule_seed_determinism():
+    a = make_straggler_degradations(range(64), seed=3)
+    b = make_straggler_degradations(range(64), seed=3)
+    assert a == b
+    assert repr(a) == repr(b)  # byte-identical, not just float-equal
+    assert a != make_straggler_degradations(range(64), seed=4)
+    assert a  # the defaults genuinely produce episodes
+
+
+def test_every_degradation_carries_its_recovery():
+    """Per target the stream alternates onset/recovery (ending at 1.0):
+    a machine stuck degraded forever would corrupt the fig16 off-vs-on
+    comparison and a derated uplink would never restore."""
+    for events in (
+        make_straggler_degradations(range(16), seed=1),
+        make_flapping_uplink_degradations(range(8), seed=1),
+        make_mixed_degradations(range(16), range(4), seed=1),
+    ):
+        per_target = {}
+        for t, dkind, target, factor in events:
+            per_target.setdefault((dkind, target), []).append((t, factor))
+        for evs in per_target.values():
+            assert len(evs) % 2 == 0
+            for i, (t, f) in enumerate(evs):
+                if i % 2:
+                    assert f == 1.0          # recovery
+                else:
+                    assert f != 1.0          # onset
+            assert all(evs[i][0] <= evs[i + 1][0]
+                       for i in range(len(evs) - 1))
+
+
+def test_straggler_factors_and_scope():
+    ev = make_straggler_degradations(range(100), seed=0, scope=0.25,
+                                     factor_min=1.5, factor_max=2.0)
+    machines = {m for _, _, m, _ in ev}
+    assert 1 <= len(machines) <= 25
+    onsets = [f for _, _, _, f in ev if f != 1.0]
+    assert onsets and all(1.5 <= f <= 2.0 for f in onsets)
+
+
+def test_slow_nic_one_chronic_window_per_uplink():
+    ev = make_slow_nic_degradations(range(8), seed=1, scope=0.5,
+                                    derate=0.4, horizon=1000.0)
+    # scope 0.5 of 8 racks = 4 uplinks, one onset + one recovery each
+    assert len(ev) == 8
+    links = {tgt for _, _, tgt, _ in ev}
+    assert len(links) == 4
+    assert all(tgt[0] == "uplink" for tgt in links)
+    for t, dkind, tgt, f in ev:
+        assert dkind == "link"
+        assert (t, f) in ((0.0, 0.4), (1000.0, 1.0))
+
+
+def test_mixed_machine_axis_matches_standalone_stragglers():
+    """Composability: the mixed schedule's machine events are byte-
+    identical to the stand-alone straggler schedule at the same seed and
+    scope — enabling link churn must not reshuffle the machine axis."""
+    mixed = make_mixed_degradations(range(32), range(8), seed=5,
+                                    machine_scope=0.5, link_scope=0.25)
+    solo = make_straggler_degradations(range(32), seed=5, scope=0.5)
+    assert [e for e in mixed if e[1] == "machine"] == solo
+
+
+def test_touching_degradation_windows_merge_keeping_harsher_factor():
+    ev = _degradation_events([
+        (0.0, 10.0, "machine", 3, 1.5),
+        (10.0, 20.0, "machine", 3, 2.5),   # touches -> merges
+        (30.0, 40.0, "machine", 3, 1.2),   # separate episode
+    ])
+    assert ev == [(0.0, "machine", 3, 2.5), (20.0, "machine", 3, 1.0),
+                  (30.0, "machine", 3, 1.2), (40.0, "machine", 3, 1.0)]
+
+
+def test_degradation_kw_typos_are_errors():
+    with pytest.raises(ValueError, match="unknown degradation mode"):
+        resolve_degradation_kw("nope")
+    with pytest.raises(ValueError, match="unknown degradation_kw"):
+        make_straggler_degradations(range(4), seed=0, mtdb=3600.0)
+    with pytest.raises(ValueError, match="unknown degradation_kw"):
+        make_flapping_uplink_degradations(range(4), seed=0, mtbd=1.0)
+
+
+# -- fabric derating ---------------------------------------------------------
+
+def _net_job(jid, placement):
+    j = Job(job_id=jid, model="yi-9b", n_gpus=8, total_iters=100,
+            compute_time_per_iter=0.5)
+    j.placement = placement
+    return j
+
+
+def test_derate_composes_with_fair_share():
+    """Effective bandwidth = min(nic, derated_capacity / load) on both
+    pricing paths — derating and contention multiply, not shadow."""
+    cl = ClusterTopology(n_racks=3, machines_per_rack=2,
+                         rack_uplink_bw=NIC, spine_bw=100 * NIC)
+    fab = FairShareFabric(cl, nic_bw=NIC)
+    a = _net_job(0, Placement(((0, 4), (2, 4))))  # racks 0-1
+    b = _net_job(1, Placement(((1, 4), (3, 4))))  # racks 0-1, same uplinks
+    assert fab.fair_shares([a, b]) == {0: NIC / 2, 1: NIC / 2}
+    fab.set_derate(("uplink", 0), 0.5)
+    shares = fab.fair_shares([a, b])
+    assert shares == {0: NIC * 0.5 / 2, 1: NIC * 0.5 / 2}
+    fab.set_derate(("uplink", 0), 1.0)  # restore
+    assert fab.fair_shares([a, b]) == {0: NIC / 2, 1: NIC / 2}
+
+
+def test_set_derate_reports_repricing_need():
+    cl = ClusterTopology(n_racks=2, machines_per_rack=2)
+    fab = FairShareFabric(cl, nic_bw=NIC)
+    # nobody on the link yet: record the derate but no re-price is due
+    assert fab.set_derate(("uplink", 0), 0.5) is False
+    a = _net_job(0, Placement(((0, 4), (2, 4))))
+    fab.add_placement(a)
+    fab.take_affected()
+    assert fab.set_derate(("uplink", 0), 0.25) is True   # members present
+    assert fab.set_derate(("uplink", 0), 0.25) is False  # no-op repeat
+    assert fab.set_derate(("uplink", 0), 1.0) is True    # restore re-prices
+
+
+def test_effective_bandwidth_probe():
+    cl = ClusterTopology(n_racks=2, machines_per_rack=2,
+                         rack_uplink_bw=4 * NIC, spine_bw=100 * NIC)
+    fab = FairShareFabric(cl, nic_bw=NIC)
+    # unloaded: nominal capacity, NIC-capped
+    assert fab.effective_bandwidth(("uplink", 0)) == NIC
+    fab.set_derate(("uplink", 0), 0.1)
+    assert fab.effective_bandwidth(("uplink", 0)) == 0.4 * NIC
+    assert fab.effective_bandwidth(("uplink", 1)) == NIC  # untouched
+
+
+# -- straggler re-pricing exactness ------------------------------------------
+
+def test_machine_degradation_stretches_one_job_exactly():
+    """A factor-2 straggler episode over [t1, t2): iterations run at
+    2x iter_time inside the window and 1x outside, with the partial
+    iteration at each boundary folded exactly (no drift, no lost work)."""
+    cl = ClusterTopology(n_racks=1, machines_per_rack=2, gpus_per_machine=4)
+    it, _ = COMM.iteration_time("yi-9b", 1.0, Placement(((0, 4),)), 2, 4)
+    t1, factor = 10.5 * it, 2.0
+    # recovery lands mid-iteration too: 10.5 whole+half iters at 1x, then
+    # degraded progress until t2, then 1x to the end
+    t2 = t1 + 7.25 * (factor * it)
+    sim = ClusterSimulator(
+        cl, make_policy("dally"), COMM,
+        degradation_events=[(t1, "machine", 0, factor),
+                            (t2, "machine", 0, 1.0)])
+    job = Job(job_id=0, model="yi-9b", n_gpus=4, total_iters=100,
+              compute_time_per_iter=1.0)
+    sim.submit(job)
+    res = sim.run()
+    assert res["n_degrade_events"] == 2
+    assert res["n_degrade_reprices"] == 2
+    # 10.5 iters before t1, 7.25 during [t1, t2), 82.25 after
+    expected = t2 + (100 - 10.5 - 7.25) * it
+    assert job.finish_time == pytest.approx(expected, rel=1e-12)
+    assert job.iters_done == 100
+
+
+def test_degrade_factor_is_max_over_placement_machines():
+    """A data-parallel step is synchronous: the slowest participant sets
+    the pace, so overlapping episodes on two machines of one placement
+    apply max(factor), not a product."""
+    cl = ClusterTopology(n_racks=1, machines_per_rack=2, gpus_per_machine=4)
+    sim = ClusterSimulator(
+        cl, make_policy("dally"), COMM,
+        degradation_events=[(100.0, "machine", 0, 1.5),
+                            (100.0, "machine", 1, 2.0),
+                            (200.0, "machine", 0, 1.0),
+                            (200.0, "machine", 1, 1.0)])
+    job = Job(job_id=0, model="yi-9b", n_gpus=8, total_iters=1000,
+              compute_time_per_iter=1.0)
+    sim.submit(job)
+    sim.begin()
+    sim.advance_to(150.0)
+    assert job.degrade_factor == 2.0
+    sim.advance_to(250.0)
+    assert job.degrade_factor == 1.0
+    res = sim.run()
+    assert res["n_finished"] == 1
+    # the same-instant two-machine burst coalesced into one re-price
+    assert res["n_degrade_reprices"] == 2
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.lists(st.tuples(st.floats(min_value=50.0, max_value=5000.0),
+                          st.floats(min_value=1.1, max_value=4.0)),
+                min_size=1, max_size=4),
+       st.integers(min_value=0, max_value=1))
+def test_interleaved_episodes_conserve_work(episodes, machine):
+    """However derate/restore interleave (overlaps merged by the window
+    builder), every iteration is eventually accounted exactly once:
+    the job finishes all iterations and total runtime >= the undegraded
+    lower bound."""
+    windows = []
+    t = 0.0
+    for gap, factor in episodes:
+        windows.append((t + gap, t + gap * 2, "machine", machine, factor))
+        t += gap * 2
+    events = _degradation_events(windows)
+    cl = ClusterTopology(n_racks=1, machines_per_rack=2, gpus_per_machine=4)
+    sim = ClusterSimulator(cl, make_policy("dally"), COMM,
+                           degradation_events=events)
+    job = Job(job_id=0, model="yi-9b", n_gpus=8, total_iters=50,
+              compute_time_per_iter=1.0)
+    sim.submit(job)
+    ref = ClusterSimulator(ClusterTopology(n_racks=1, machines_per_rack=2,
+                                           gpus_per_machine=4),
+                           make_policy("dally"), COMM)
+    ref_job = Job(job_id=0, model="yi-9b", n_gpus=8, total_iters=50,
+                  compute_time_per_iter=1.0)
+    ref.submit(ref_job)
+    ref.run()
+    res = sim.run()
+    assert res["n_finished"] == 1
+    assert job.iters_done == 50
+    assert job.finish_time >= ref_job.finish_time - 1e-9
+    assert job.degrade_factor == 1.0  # every onset recovered
+
+
+def test_link_degradation_requires_fair_share_fabric():
+    sc = "slow-nics"
+    from repro.experiments import get_scenario
+    import dataclasses
+    plain = dataclasses.replace(get_scenario(sc), contention_mode=None,
+                                rack_uplink_bw=None, spine_bw=None)
+    with pytest.raises(ValueError, match="fair-share"):
+        run_one(plain, policy="dally", seed=0,
+                overrides=SimOverrides(n_jobs=5))
+
+
+def test_link_degradation_triggers_fabric_reprices():
+    art = run_one("flapping-uplinks", policy="scatter", seed=0,
+                  overrides=SimOverrides(n_jobs=20))
+    m = art["metrics"]
+    assert m["n_degrade_events"] > 0
+    assert m["n_reprices"] > 0
+
+
+# -- determinism and the off-switch ------------------------------------------
+
+def test_degradation_on_runs_are_seed_deterministic():
+    kw = dict(policy="dally", seed=2, overrides=SimOverrides(n_jobs=15))
+    a = artifact_json(run_one("degraded-cluster", **kw))
+    b = artifact_json(run_one("degraded-cluster", **kw))
+    assert a == b
+    assert a != artifact_json(run_one("degraded-cluster", policy="dally",
+                                      seed=3,
+                                      overrides=SimOverrides(n_jobs=15)))
+
+
+def test_empty_faultspec_is_byte_identical_to_no_faults():
+    """FaultSpec() enables nothing: same bytes, same v1 schema — the
+    degradation machinery must be invisible until asked for."""
+    ref = run_one("smoke", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=20))
+    off = run_one("smoke", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=20, faults=FaultSpec()))
+    assert artifact_json(off) == artifact_json(ref)
+    assert off["schema"] == "repro.experiments.artifact/v1"
+    assert "n_degrade_events" not in off["metrics"]
+
+
+# -- schema v5 + provenance --------------------------------------------------
+
+def test_degradation_artifact_schema_v5_and_provenance():
+    art = run_one("straggler-degradation", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=15))
+    assert art["schema"] == "repro.experiments.artifact/v5"
+    cfg = art["config"]
+    assert cfg["degradation"] == "stragglers"
+    # RESOLVED knobs recorded (defaults merged), same contract as
+    # failure_kw provenance
+    assert cfg["degradation_kw"]["scope"] == 0.25
+    assert cfg["degradation_kw"]["horizon"] == 7 * 24 * 3600.0
+    m = art["metrics"]
+    assert m["n_degrade_events"] > 0
+    assert "telemetry" not in m  # opt-in, not implied by degradation
+
+
+def test_telemetry_alone_flips_schema_v5():
+    art = run_one("smoke", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=10,
+                                         faults=FaultSpec(telemetry=True)))
+    assert art["schema"] == "repro.experiments.artifact/v5"
+    assert art["config"]["telemetry"] is True
+    assert "degradation" not in art["config"]
+    tel = art["metrics"]["telemetry"]
+    assert tel["schema"] == "repro.core.telemetry/v1"
+
+
+def test_registry_covers_degradation_scenarios():
+    from repro.experiments import SCENARIOS
+    for name, mode in (("straggler-degradation", "stragglers"),
+                       ("slow-nics", "slow-nics"),
+                       ("flapping-uplinks", "flapping-uplinks"),
+                       ("degraded-cluster", "mixed")):
+        assert name in SCENARIOS
+        assert SCENARIOS[name].faults.degradation == mode
+
+
+# -- telemetry ---------------------------------------------------------------
+
+def test_telemetry_integrates_to_aggregate_utilization():
+    """The per-machine busy series is an exact decomposition of the
+    Timeline's aggregate: per sample sum(busy_row) == timeline busy, and
+    the utilization integral matches metrics.avg_utilization exactly."""
+    from repro.experiments import get_scenario
+    sc = get_scenario("degraded-cluster").with_overrides(
+        n_jobs=15, faults=FaultSpec(telemetry=True))
+    sim = sc.build_sim(ARCHS_L, policy="dally", seed=0)
+    res = sim.run(max_time=sc.max_time)
+    tel, tl = sim.telemetry, sim.timeline
+    assert tel.t == tl.t  # sample-for-sample aligned
+    assert len(tel.t) > 0
+    for row, busy in zip(tel.busy_gpus, tl.busy_gpus):
+        assert sum(row) == busy
+    util = sum(sum(row) / max(g, 1) for row, g in
+               zip(tel.busy_gpus, tl.total_gpus)) / len(tel.t)
+    assert util == res["avg_utilization"]  # exact, not approx
+
+
+def test_telemetry_links_report_derated_bandwidth():
+    # derate harsh enough to dip below the NIC cap, so the chronic
+    # degradation is visible in the probe even on an unloaded uplink
+    art = run_one("slow-nics", policy="scatter", seed=0,
+                  overrides=SimOverrides(
+                      n_jobs=15,
+                      faults=FaultSpec(degradation="slow-nics",
+                                       degradation_kw={"derate": 0.1},
+                                       telemetry=True)))
+    tel = art["metrics"]["telemetry"]
+    assert "spine" in tel["links"]
+    uplinks = [ln for ln in tel["links"] if ln.startswith("uplink:")]
+    assert uplinks
+    by_link = tel["link_bw"]
+    assert all(len(by_link[ln]) == len(tel["t"]) for ln in tel["links"])
+    nominal = max(max(by_link[ln]) for ln in uplinks)
+    assert any(min(by_link[ln]) < nominal for ln in uplinks)
+
+
+def test_telemetry_stays_out_of_artifacts_unless_asked():
+    art = run_one("degraded-cluster", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=10))
+    assert "telemetry" not in art["metrics"]
+    assert "telemetry" not in art["config"]
+
+
+# -- dally's straggler reaction ----------------------------------------------
+
+def test_dally_evicts_hard_stragglers():
+    art = run_one("straggler-degradation", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=40))
+    m = art["metrics"]
+    assert m["n_degrade_events"] > 0
+    assert m["n_straggler_evictions"] > 0
+    # non-reacting policies never evict
+    sc = run_one("straggler-degradation", policy="scatter", seed=0,
+                 overrides=SimOverrides(n_jobs=40))
+    assert sc["metrics"]["n_straggler_evictions"] == 0
+
+
+def test_fig16_acceptance_dally_beats_scatter_under_degradation():
+    """The fig16 headline at CI scale: under mixed straggler + flapping-
+    uplink churn, dally's consolidation + straggler reaction must beat
+    the scatter baseline on makespan."""
+    ov = SimOverrides(n_jobs=40)
+    da = run_one("degraded-cluster", policy="dally", seed=0, overrides=ov)
+    sc = run_one("degraded-cluster", policy="scatter", seed=0, overrides=ov)
+    assert da["metrics"]["n_degrade_events"] > 0
+    assert da["metrics"]["makespan"] < sc["metrics"]["makespan"]
+
+
+# -- sweep integration -------------------------------------------------------
+
+def test_sweep_surfaces_wedged_flag(tmp_path, monkeypatch):
+    """Regression (PR 7 follow-up): a wedged cell must be visible in the
+    sweep index rows, not only inside the per-cell artifact."""
+    import repro.experiments.sweep as sweep_mod
+
+    def fake_run_one(scenario, policy=None, seed=0, overrides=None):
+        return {"schema": "repro.experiments.artifact/v1",
+                "scenario": "smoke", "policy": policy, "seed": seed,
+                "config": {}, "metrics": {
+                    "makespan": 1.0, "jct": {"avg": 1.0, "p99": 1.0},
+                    "avg_utilization": 0.5, "n_finished": 1,
+                    "wedged": seed == 1}}
+
+    monkeypatch.setattr(sweep_mod, "run_one", fake_run_one)
+    idx = sweep_mod.sweep(["smoke"], ["dally"], [0, 1], workers=1,
+                          out_dir=tmp_path)
+    by_seed = {r["seed"]: r for r in idx["runs"]}
+    assert by_seed[0]["wedged"] is False
+    assert by_seed[1]["wedged"] is True
+
+
+def test_sweep_degradation_flag_threads_to_v5_artifacts(tmp_path):
+    idx = sweep(["smoke"], ["dally"], [0], workers=1, out_dir=tmp_path,
+                n_jobs=10, degradation="stragglers", telemetry=True)
+    assert idx["overrides"]["faults"] == {"degradation": "stragglers",
+                                          "telemetry": True}
+    art = json.loads(
+        (tmp_path / "smoke__dally__seed0.json").read_text())
+    assert art["schema"] == "repro.experiments.artifact/v5"
+    assert art["config"]["degradation"] == "stragglers"
+    assert art["metrics"]["telemetry"]["t"]

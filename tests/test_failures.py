@@ -17,7 +17,7 @@ from repro.core.job import Job
 from repro.core.policies import make_policy
 from repro.core.topology import Placement
 from repro.core.trace import resolve_failure_kw
-from repro.experiments import Scenario, SimOverrides, run_one
+from repro.experiments import FaultSpec, Scenario, SimOverrides, run_one
 from repro.experiments.sweep import sweep
 
 ARCHS_L = list(ARCHS.values())
@@ -86,10 +86,11 @@ def test_failure_kw_typos_are_errors():
         make_mtbf_failures(range(4), seed=0, mtfb=3600.0)
     with pytest.raises(ValueError, match="unknown failure mode"):
         resolve_failure_kw("nope")
-    sc = Scenario("t-bad", n_racks=1, trace="batch", n_jobs=2,
-                  failure_mode="bogus")
-    with pytest.raises(ValueError, match="unknown failure_mode"):
-        run_one(sc, policy="dally", seed=0)
+    # FaultSpec validates eagerly: a typo'd mode fails at construction,
+    # not after a long cell
+    with pytest.raises(ValueError, match="unknown failure mode"):
+        Scenario("t-bad", n_racks=1, trace="batch", n_jobs=2,
+                 faults=FaultSpec(mode="bogus"))
 
 
 # -- crash semantics ---------------------------------------------------------
@@ -181,7 +182,8 @@ def test_registry_covers_failure_scenarios():
     from repro.experiments import SCENARIOS
     for name in ("failure-prone", "rolling-maintenance", "hotspot-flaky"):
         assert name in SCENARIOS
-        assert SCENARIOS[name].failure_mode is not None
+        assert SCENARIOS[name].faults is not None
+        assert SCENARIOS[name].faults.mode is not None
 
 
 def test_failure_artifact_schema_v4_and_provenance():
@@ -208,8 +210,8 @@ def test_hotspot_flaky_composes_churn_with_fabric():
 
 def test_failures_override_flips_any_scenario_to_v4():
     on = run_one("smoke", policy="dally", seed=0,
-                 overrides=SimOverrides(n_jobs=15,
-                                        failures="maintenance"))
+                 overrides=SimOverrides(
+                     n_jobs=15, faults=FaultSpec(mode="maintenance")))
     off = run_one("smoke", policy="dally", seed=0,
                   overrides=SimOverrides(n_jobs=15))
     assert on["schema"] == "repro.experiments.artifact/v4"
@@ -223,14 +225,15 @@ def test_failures_mode_switch_resets_incompatible_kw():
     must apply the new mode's defaults, not reject mtbf/mttr as unknown
     keys — the sweep documents --failures as overriding every scenario."""
     art = run_one("failure-prone", policy="dally", seed=0,
-                  overrides=SimOverrides(n_jobs=15,
-                                         failures="maintenance"))
+                  overrides=SimOverrides(
+                      n_jobs=15, faults=FaultSpec(mode="maintenance")))
     assert art["config"]["failure_mode"] == "maintenance"
     assert "mtbf" not in art["config"]["failure_kw"]
     assert art["config"]["failure_kw"]["window"] == 3600.0
     # same-mode override keeps the scenario's tuned knobs
     same = run_one("failure-prone", policy="dally", seed=0,
-                   overrides=SimOverrides(n_jobs=15, failures="mtbf"))
+                   overrides=SimOverrides(n_jobs=15,
+                                          faults=FaultSpec(mode="mtbf")))
     assert same["config"]["failure_kw"]["mttr"] == 2 * 3600.0
 
 
@@ -249,8 +252,8 @@ def test_sweep_failures_byte_identical_across_workers(tmp_path):
         assert a.read_bytes() == b.read_bytes()
     art = json.loads(f1[0].read_text())
     assert art["schema"] == "repro.experiments.artifact/v4"
-    assert idx1["overrides"]["failures"] == "mtbf"
-    assert idx2["overrides"]["failures"] == "mtbf"
+    assert idx1["overrides"]["faults"] == {"mode": "mtbf"}
+    assert idx2["overrides"]["faults"] == {"mode": "mtbf"}
 
 
 # -- fig15 acceptance --------------------------------------------------------

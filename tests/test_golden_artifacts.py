@@ -64,6 +64,15 @@ EXPECTED_V2 = {
         "85780c881f53f71118196d987088abb15dafb720f322680186fe55a16b480849",
 }
 
+# analog-degradation cell (schema v5): mixed straggler + flapping-uplink
+# churn on a fair-share fabric — pins straggler re-pricing, link derating
+# composed with contention, and dally's evict-or-tolerate reaction end to
+# end (13 evictions inside this cell).
+EXPECTED_V5 = {
+    ("degraded-cluster", "dally", 0, 32):
+        "6b87409037350d0cda4361e6c75fc7021b4bfdf93b2be2242971a1683d8634dc",
+}
+
 
 def _digest(scenario, policy, seed, n_jobs,
             schema="repro.experiments.artifact/v1"):
@@ -93,6 +102,10 @@ def test_golden_artifact_digests_v2_contention():
 
 def test_golden_artifact_digests_v4_failures():
     _check(EXPECTED_V4, "repro.experiments.artifact/v4")
+
+
+def test_golden_artifact_digests_v5_degradation():
+    _check(EXPECTED_V5, "repro.experiments.artifact/v5")
 
 
 def test_golden_artifacts_are_volatile_free():

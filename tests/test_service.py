@@ -19,7 +19,7 @@ import pytest
 from repro.configs import ARCHS
 from repro.core.simulator import ClusterSimulator
 from repro.core.trace import compute_time_per_iter, make_batch_trace
-from repro.experiments import SimOverrides, get_scenario
+from repro.experiments import FaultSpec, SimOverrides, get_scenario
 from repro.service import (
     DuplicateJobSpec,
     JobSpec,
@@ -107,8 +107,8 @@ def test_online_submission_interleaving_equals_batch():
 
 
 def test_snapshot_restore_mid_run_is_invisible():
-    sc = get_scenario("smoke").with_overrides(n_jobs=25,
-                                              failure_mode="mtbf")
+    sc = get_scenario("smoke").with_overrides(
+        n_jobs=25, faults=FaultSpec(mode="mtbf"))
     ref = sc.build_sim(ARCHS_L, policy="dally", seed=0).run()
     sim = sc.build_sim(ARCHS_L, policy="dally", seed=0)
     sim.begin()
@@ -123,7 +123,7 @@ def test_snapshot_restore_mid_run_is_invisible():
 
 @pytest.mark.parametrize("overrides,crash_after", [
     (SimOverrides(contention="fair-share"), 9),   # contention-on
-    (SimOverrides(failures="mtbf", n_racks=2), 5),  # failures-on
+    (SimOverrides(faults=FaultSpec(mode="mtbf"), n_racks=2), 5),
 ], ids=["contention", "failures"])
 def test_crash_recovery_byte_identity(tmp_path, overrides, crash_after):
     ref = _run_service(tmp_path / "ref", overrides)
@@ -287,7 +287,7 @@ def test_reopening_with_conflicting_config_errors(tmp_path):
         SchedulerService(tmp_path / "s", scenario="paper-batch")
     with pytest.raises(ServiceError, match="overrides"):
         SchedulerService(tmp_path / "s",
-                         overrides=SimOverrides(failures="mtbf"))
+                         overrides=SimOverrides(faults=FaultSpec(mode="mtbf")))
     # unspecified args defer to service.json: reopening plain works
     SchedulerService(tmp_path / "s").close()
 

@@ -1,11 +1,15 @@
 #!/usr/bin/env python
 """Lint guard: the repo must eat its own consolidated API.
 
-The legacy ``run_one(..., n_jobs=...)`` keyword spellings are deprecated
-shims kept for external callers; nothing inside ``src/`` or ``benchmarks/``
-may use them (tests exercising the shims are exempt).  ruff has no custom
-rules, so this walks the AST: every ``run_one`` / ``run_one_timed`` call
-whose keywords intersect the legacy set is a violation.
+The legacy ``run_one(..., n_jobs=...)`` keyword spellings — and the
+pre-FaultSpec failure kwargs (``SimOverrides(failures=...)``,
+``Scenario(failure_mode=..., failure_kw=...)`` and their
+``with_overrides`` / ``dataclasses.replace`` forms) — are deprecated
+shims kept for external callers; nothing inside ``src/`` or
+``benchmarks/`` may use them (tests exercising the shims are exempt).
+ruff has no custom rules, so this walks the AST: every call whose name
+matches a rule and whose keywords intersect that rule's legacy set is a
+violation.
 
     python tools/check_legacy_kwargs.py [root...]
 
@@ -17,13 +21,30 @@ import ast
 import pathlib
 import sys
 
-TARGET_CALLS = {"run_one", "run_one_timed"}
 LEGACY_KWARGS = {"n_racks", "n_jobs", "max_time", "contention",
                  "parallelism", "failures", "comm", "archs",
                  "naive_topology"}
+# the pre-FaultSpec failure surface (PR 8): churn mode/knobs belong in
+# faults=FaultSpec(mode=..., knobs=...) everywhere inside the repo
+LEGACY_FAILURE_KWARGS = {"failure_mode", "failure_kw"}
+# call name -> (legacy kwarg set, suggested replacement)
+RULES = {
+    "run_one": (LEGACY_KWARGS, "overrides=SimOverrides(...)"),
+    "run_one_timed": (LEGACY_KWARGS, "overrides=SimOverrides(...)"),
+    "SimOverrides": ({"failures"}, "faults=FaultSpec(mode=...)"),
+    "Scenario": (LEGACY_FAILURE_KWARGS,
+                 "faults=FaultSpec(mode=..., knobs=...)"),
+    "scenario_from_csv": (LEGACY_FAILURE_KWARGS,
+                          "faults=FaultSpec(mode=..., knobs=...)"),
+    "with_overrides": (LEGACY_FAILURE_KWARGS,
+                       "faults=FaultSpec(mode=..., knobs=...)"),
+    "replace": (LEGACY_FAILURE_KWARGS,
+                "faults=dataclasses.replace(spec.faults, ...)"),
+}
 DEFAULT_ROOTS = ("src", "benchmarks")
-# the shim implementation itself (defines/forwards the legacy names)
-EXEMPT = {pathlib.Path("src/repro/experiments/runner.py")}
+# the shim implementations themselves (define/forward the legacy names)
+EXEMPT = {pathlib.Path("src/repro/experiments/runner.py"),
+          pathlib.Path("src/repro/experiments/scenario.py")}
 
 
 def _call_name(node: ast.Call) -> str:
@@ -45,12 +66,13 @@ def check_file(path: pathlib.Path) -> list:
     for node in ast.walk(tree):
         if not isinstance(node, ast.Call):
             continue
-        if _call_name(node) not in TARGET_CALLS:
+        rule = RULES.get(_call_name(node))
+        if rule is None:
             continue
-        bad = sorted(kw.arg for kw in node.keywords
-                     if kw.arg in LEGACY_KWARGS)
+        legacy, hint = rule
+        bad = sorted(kw.arg for kw in node.keywords if kw.arg in legacy)
         if bad:
-            out.append((path, node.lineno, _call_name(node), bad))
+            out.append((path, node.lineno, _call_name(node), bad, hint))
     return out
 
 
@@ -63,9 +85,9 @@ def main(argv=None) -> int:
             if path in EXEMPT:
                 continue
             violations.extend(check_file(path))
-    for path, line, fn, bad in violations:
+    for path, line, fn, bad, hint in violations:
         print(f"{path}:{line}: {fn}() uses deprecated legacy kwarg(s) "
-              f"{', '.join(bad)} — pass overrides=SimOverrides(...) "
+              f"{', '.join(bad)} — pass {hint} "
               "instead (docs/experiments.md)")
     if violations:
         return 1
