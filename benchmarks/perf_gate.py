@@ -26,6 +26,9 @@ import time
 
 # timings below this floor are all noise: never flag a regression on them
 MIN_GATED_SECONDS = 1.0
+# same idea for the memory gate: interpreter/allocator jitter dominates
+# below this, so the floor keeps tiny baselines from manufacturing flags
+MIN_GATED_MB = 50.0
 # best-of-N wall clocks: the min discards scheduler hiccups and cold-cache
 # effects, which matters on shared CI runners
 REPEATS = 2
@@ -125,6 +128,36 @@ def _time_dally_dc() -> float:
     return time.perf_counter() - t0
 
 
+def _time_streamed_replay_small() -> dict:
+    # constant-memory replay cell: streamed philly source + JSONL spill,
+    # in its own subprocess so ru_maxrss is the cell's own high-water
+    # mark.  The only benchmark with a memory gate: a regression that
+    # re-materializes the trace or re-retains finished jobs shows up as
+    # peak-RSS growth here even when wall clock is unchanged.
+    import os
+    import subprocess
+    code = (
+        "import dataclasses, json, resource, tempfile, time\n"
+        "from repro.experiments import SimOverrides, get_scenario, run_one\n"
+        "sc = dataclasses.replace(get_scenario('million-replay'),\n"
+        "    n_racks=8, n_jobs=8000,\n"
+        "    trace_kw={'mean_interarrival': 128.0})\n"
+        "t0 = time.time()\n"
+        "with tempfile.TemporaryDirectory() as d:\n"
+        "    run_one(sc, seed=0, overrides=SimOverrides(spill_dir=d))\n"
+        "print(json.dumps({'wall_s': time.time() - t0, 'peak_rss_mb':\n"
+        "    resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0}))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO_ROOT / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, "-c", code], check=True,
+                          capture_output=True, text=True, env=env,
+                          cwd=REPO_ROOT)
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
 BENCHMARKS = {
     "fig7_small": _time_fig7_small,
     "smoke_sweep": _time_smoke_sweep,
@@ -132,6 +165,7 @@ BENCHMARKS = {
     "failures_small": _time_failures_small,
     "degradation_small": _time_degradation_small,
     "dally_dc_small": _time_dally_dc,
+    "streamed_replay_small": _time_streamed_replay_small,
 }
 
 
@@ -144,9 +178,21 @@ def measure() -> dict:
         "benchmarks": {},
     }
     for name, fn in BENCHMARKS.items():
-        wall = min(fn() for _ in range(REPEATS))
-        out["benchmarks"][name] = {"wall_s": round(wall, 3)}
-        print(f"perf_gate.{name}.wall_seconds,{wall:.2f},", flush=True)
+        # benchmarks return either a bare wall-clock float or a dict of
+        # measurements; best-of-N applies per measurement (min discards
+        # one-off scheduler/allocator spikes for RSS just as for time)
+        runs = [fn() for _ in range(REPEATS)]
+        runs = [r if isinstance(r, dict) else {"wall_s": r} for r in runs]
+        entry = {"wall_s": round(min(r["wall_s"] for r in runs), 3)}
+        if "peak_rss_mb" in runs[0]:
+            entry["peak_rss_mb"] = round(
+                min(r["peak_rss_mb"] for r in runs), 1)
+        out["benchmarks"][name] = entry
+        print(f"perf_gate.{name}.wall_seconds,{entry['wall_s']:.2f},",
+              flush=True)
+        if "peak_rss_mb" in entry:
+            print(f"perf_gate.{name}.peak_rss_mb,"
+                  f"{entry['peak_rss_mb']:.1f},", flush=True)
     return out
 
 
@@ -180,6 +226,21 @@ def compare(current: dict, baseline: dict, threshold: float) -> list:
             print(f"perf_gate.{name}: {cur_s:.2f}s vs baseline "
                   f"{base_s:.2f}s (machine-scaled x{scale:.2f}) — ok",
                   flush=True)
+        if "peak_rss_mb" in cur and "peak_rss_mb" in base:
+            # memory is NOT machine-scaled: ru_maxrss does not track CPU
+            # speed, and a streamed replay's peak RSS should be the same
+            # on any runner.  >threshold growth means the constant-memory
+            # invariant broke (trace materialized / finished jobs retained)
+            base_mb, cur_mb = base["peak_rss_mb"], cur["peak_rss_mb"]
+            limit_mb = max(base_mb, MIN_GATED_MB) * (1.0 + threshold)
+            if cur_mb > limit_mb:
+                regressions.append(
+                    f"{name}: peak RSS {cur_mb:.1f}MB vs baseline "
+                    f"{base_mb:.1f}MB (> {limit_mb:.1f}MB at "
+                    f"+{threshold:.0%})")
+            else:
+                print(f"perf_gate.{name}: peak RSS {cur_mb:.1f}MB vs "
+                      f"baseline {base_mb:.1f}MB — ok", flush=True)
     return regressions
 
 

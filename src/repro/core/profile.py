@@ -18,17 +18,28 @@ from typing import Dict
 
 
 class SimProfile:
-    """Wall-time + call-count accumulator keyed by phase name."""
+    """Wall-time + call-count accumulator keyed by phase name, plus
+    max-keeping gauges (live event-/wait-queue depths, peak RSS)."""
 
-    __slots__ = ("counts", "seconds")
+    __slots__ = ("counts", "seconds", "gauges")
 
     def __init__(self):
         self.counts: Dict[str, int] = {}
         self.seconds: Dict[str, float] = {}
+        # name -> max observed value; surfaced separately from the phase
+        # timings (results()["profile_gauges"]) so the phase-dict shape —
+        # and every consumer summing its wall_s values — is unchanged
+        self.gauges: Dict[str, float] = {}
 
     def add(self, phase: str, dt: float, n: int = 1) -> None:
         self.counts[phase] = self.counts.get(phase, 0) + n
         self.seconds[phase] = self.seconds.get(phase, 0.0) + dt
+
+    def gauge(self, name: str, value) -> None:
+        """Record a level signal, keeping the maximum observed."""
+        cur = self.gauges.get(name)
+        if cur is None or value > cur:
+            self.gauges[name] = value
 
     def as_dict(self) -> Dict[str, Dict[str, float]]:
         """``{phase: {"calls": int, "wall_s": float}}``, phases sorted."""

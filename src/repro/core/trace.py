@@ -16,6 +16,8 @@ generate seeded synthetic traces matched to the published statistics:
 from __future__ import annotations
 
 import csv
+import dataclasses
+import json
 import math
 import random
 from typing import List, Optional, Sequence
@@ -23,7 +25,7 @@ from typing import List, Optional, Sequence
 from repro.types import TPU_V5E, HardwareProfile
 
 from .job import Job
-from .parallelism import plan_for
+from .parallelism import ParallelPlan, plan_for
 
 PARALLELISM_MODES = (None, "auto")
 
@@ -122,6 +124,34 @@ def _filter_archs(archs, families) -> List:
     return arch_list
 
 
+def _sample_job(rng: random.Random, job_id: int, arrival: float,
+                arch_list, pmf, median_gpu_hours, sigma,
+                profile: HardwareProfile, parallelism,
+                gpus_per_machine) -> Job:
+    """One job drawn from ``rng`` — the exact per-job draw order
+    (cfg, g, tokens, gpu_hours) of the ``_make_jobs`` loop body, shared
+    with the streaming twins in ``trace_source`` so a lazily-generated
+    job stream is byte-identical to the materialized list."""
+    cfg = rng.choice(arch_list)
+    g = _sample_demand(rng, pmf)
+    tokens = rng.choice(TOKENS_PER_GPU_ITER_CHOICES)
+    t_iter = compute_time_per_iter(cfg.n_active_params(), tokens, profile)
+    gpu_hours = min(rng.lognormvariate(math.log(median_gpu_hours), sigma),
+                    MAX_JOB_HOURS)
+    runtime = gpu_hours * 3600.0  # wall-clock ideal runtime
+    iters = max(int(runtime / t_iter), 10)
+    return Job(
+        job_id=job_id,
+        model=cfg.name,
+        n_gpus=g,
+        total_iters=iters,
+        compute_time_per_iter=t_iter,
+        arrival=arrival,
+        skew=_cached_skew(cfg),
+        plan=_job_plan(parallelism, cfg, g, tokens, gpus_per_machine),
+    )
+
+
 def _make_jobs(n_jobs, arrivals, archs, seed,
                median_gpu_hours=2.0, sigma=1.2,
                profile: HardwareProfile = TPU_V5E,
@@ -131,27 +161,10 @@ def _make_jobs(n_jobs, arrivals, archs, seed,
     rng = random.Random(seed)
     arch_list = _filter_archs(archs, families)
     pmf = GPU_DEMAND_PMF if demand_pmf is None else list(demand_pmf)
-    jobs = []
-    for i in range(n_jobs):
-        cfg = rng.choice(arch_list)
-        g = _sample_demand(rng, pmf)
-        tokens = rng.choice(TOKENS_PER_GPU_ITER_CHOICES)
-        t_iter = compute_time_per_iter(cfg.n_active_params(), tokens, profile)
-        gpu_hours = min(rng.lognormvariate(math.log(median_gpu_hours), sigma),
-                        MAX_JOB_HOURS)
-        runtime = gpu_hours * 3600.0  # wall-clock ideal runtime
-        iters = max(int(runtime / t_iter), 10)
-        jobs.append(Job(
-            job_id=i,
-            model=cfg.name,
-            n_gpus=g,
-            total_iters=iters,
-            compute_time_per_iter=t_iter,
-            arrival=arrivals[i],
-            skew=_cached_skew(cfg),
-            plan=_job_plan(parallelism, cfg, g, tokens, gpus_per_machine),
-        ))
-    return jobs
+    return [_sample_job(rng, i, arrivals[i], arch_list, pmf,
+                        median_gpu_hours, sigma, profile, parallelism,
+                        gpus_per_machine)
+            for i in range(n_jobs)]
 
 
 def make_batch_trace(archs: Sequence, n_jobs: int = 500, seed: int = 0,
@@ -231,21 +244,36 @@ def make_mixed_trace(archs: Sequence, n_jobs: int = 400, seed: int = 0,
     jobs = []
     for i in range(n_jobs):
         t += rng.expovariate(1.0 / mean_interarrival)
-        large = rng.random() < large_fraction
-        g = _sample_demand(rng, LARGE_JOB_PMF if large else SMALL_JOB_PMF)
-        cfg = rng.choice(arch_list)
-        tokens = rng.choice(TOKENS_PER_GPU_ITER_CHOICES)
-        t_iter = compute_time_per_iter(cfg.n_active_params(), tokens, profile)
-        median = large_median_gpu_hours if large else small_median_gpu_hours
-        gpu_hours = min(rng.lognormvariate(math.log(median), sigma),
-                        MAX_JOB_HOURS)
-        iters = max(int(gpu_hours * 3600.0 / t_iter), 10)
-        jobs.append(Job(job_id=i, model=cfg.name, n_gpus=g,
-                        total_iters=iters, compute_time_per_iter=t_iter,
-                        arrival=t, skew=_cached_skew(cfg),
-                        plan=_job_plan(parallelism, cfg, g, tokens,
-                                       gpus_per_machine)))
+        jobs.append(_sample_mixed_job(
+            rng, i, t, arch_list, large_fraction, small_median_gpu_hours,
+            large_median_gpu_hours, sigma, profile, parallelism,
+            gpus_per_machine))
     return jobs
+
+
+def _sample_mixed_job(rng: random.Random, job_id: int, arrival: float,
+                      arch_list, large_fraction, small_median_gpu_hours,
+                      large_median_gpu_hours, sigma,
+                      profile: HardwareProfile, parallelism,
+                      gpus_per_machine) -> Job:
+    """The mixed-trace per-job draw order (large, g, cfg, tokens,
+    gpu_hours) — NOTE it differs from ``_sample_job``'s; shared with the
+    streaming twin, which advances the arrival clock from the same rng
+    before each call exactly like ``make_mixed_trace``'s loop."""
+    large = rng.random() < large_fraction
+    g = _sample_demand(rng, LARGE_JOB_PMF if large else SMALL_JOB_PMF)
+    cfg = rng.choice(arch_list)
+    tokens = rng.choice(TOKENS_PER_GPU_ITER_CHOICES)
+    t_iter = compute_time_per_iter(cfg.n_active_params(), tokens, profile)
+    median = large_median_gpu_hours if large else small_median_gpu_hours
+    gpu_hours = min(rng.lognormvariate(math.log(median), sigma),
+                    MAX_JOB_HOURS)
+    iters = max(int(gpu_hours * 3600.0 / t_iter), 10)
+    return Job(job_id=job_id, model=cfg.name, n_gpus=g,
+               total_iters=iters, compute_time_per_iter=t_iter,
+               arrival=arrival, skew=_cached_skew(cfg),
+               plan=_job_plan(parallelism, cfg, g, tokens,
+                              gpus_per_machine))
 
 
 # Philly-style statistics (Jeon et al., "Analysis of Large-Scale Multi-
@@ -630,16 +658,79 @@ def _parse_time(value):
         return datetime.fromisoformat(str(value).strip()).timestamp(), True
 
 
+def _plan_to_cell(plan: Optional[ParallelPlan]) -> str:
+    return "" if plan is None else json.dumps(dataclasses.asdict(plan),
+                                              sort_keys=True)
+
+
+def _plan_from_cell(raw) -> Optional[ParallelPlan]:
+    if raw in (None, ""):
+        return None
+    return ParallelPlan(**json.loads(raw))
+
+
 def save_csv_trace(jobs: Sequence[Job], path) -> None:
     """Write a trace in the canonical CSV schema (round-trips exactly
-    through load_csv_trace)."""
+    through load_csv_trace).  Plan-bearing jobs (parallelism="auto") get
+    an extra ``plan`` column holding the JSON-encoded ``ParallelPlan``
+    fields; plan-less traces keep the byte-identical 7-column layout."""
+    jobs = list(jobs)
+    with_plans = any(j.plan is not None for j in jobs)
     with open(path, "w", newline="") as f:
         w = csv.writer(f)
-        w.writerow(CSV_FIELDS)
+        w.writerow(CSV_FIELDS + ("plan",) if with_plans else CSV_FIELDS)
         for j in jobs:
-            w.writerow([j.job_id, j.model, j.n_gpus, j.total_iters,
-                        repr(j.compute_time_per_iter), repr(j.arrival),
-                        repr(j.skew)])
+            row = [j.job_id, j.model, j.n_gpus, j.total_iters,
+                   repr(j.compute_time_per_iter), repr(j.arrival),
+                   repr(j.skew)]
+            if with_plans:
+                row.append(_plan_to_cell(j.plan))
+            w.writerow(row)
+
+
+def _job_from_row(i: int, row: dict, arch_by_name: dict, arch_list,
+                  profile: HardwareProfile, tokens_per_iter: int):
+    """One CSV row -> ``(Job, was_datetime)``.  ``arrival`` and
+    ``job_id`` are the RAW per-row values: callers apply the whole-trace
+    datetime-origin shift and id-collision renumbering (``load_csv_trace``
+    materialized, ``HeliosCsvTrace`` from its first streaming pass)."""
+    arrival, was_dt = _parse_time(_col(row, "arrival") or 0.0)
+    g = int(float(_col(row, "n_gpus") or 1))
+    model = _col(row, "model")
+    cfg = arch_by_name.get(model)
+    if cfg is None and arch_list:
+        # unknown or missing model name: deterministically assign one of
+        # ours and RENAME the job to it — a foreign name (e.g. resnet50)
+        # would KeyError later inside CommModel.allreduce_time
+        cfg = arch_list[i % len(arch_list)]
+        model = cfg.name
+    t_iter = _col(row, "compute_time_per_iter")
+    iters = _col(row, "total_iters")
+    if t_iter is not None and iters is not None:
+        t_iter, iters = float(t_iter), int(float(iters))
+    else:
+        if cfg is None:
+            raise ValueError(
+                f"row {i}: no iteration structure in the CSV and no "
+                "archs given to derive one from")
+        duration = float(_col(row, "duration") or 3600.0)
+        t_iter = compute_time_per_iter(cfg.n_active_params(),
+                                       tokens_per_iter, profile)
+        iters = max(int(duration / t_iter), 10)
+    skew = _col(row, "skew")
+    if skew is not None:
+        skew = float(skew)
+    else:
+        skew = _cached_skew(cfg) if cfg is not None else 0.0
+    raw_id = _col(row, "job_id")
+    try:  # Philly ids like 'application_1506638472019_10258' -> row index
+        job_id = int(float(raw_id)) if raw_id is not None else i
+    except ValueError:
+        job_id = i
+    return Job(job_id=job_id, model=model or "unknown", n_gpus=g,
+               total_iters=iters, compute_time_per_iter=t_iter,
+               arrival=arrival, skew=skew,
+               plan=_plan_from_cell(row.get("plan"))), was_dt
 
 
 def load_csv_trace(path, archs: Optional[Sequence] = None,
@@ -658,54 +749,25 @@ def load_csv_trace(path, archs: Optional[Sequence] = None,
     jobs = []
     saw_datetime = False
     for i, row in enumerate(rows):
-        arrival, was_dt = _parse_time(_col(row, "arrival") or 0.0)
+        job, was_dt = _job_from_row(i, row, arch_by_name, arch_list,
+                                    profile, tokens_per_iter)
         saw_datetime = saw_datetime or was_dt
-        g = int(float(_col(row, "n_gpus") or 1))
-        model = _col(row, "model")
-        cfg = arch_by_name.get(model)
-        if cfg is None and arch_list:
-            # unknown or missing model name: deterministically assign one of
-            # ours and RENAME the job to it — a foreign name (e.g. resnet50)
-            # would KeyError later inside CommModel.allreduce_time
-            cfg = arch_list[i % len(arch_list)]
-            model = cfg.name
-        t_iter = _col(row, "compute_time_per_iter")
-        iters = _col(row, "total_iters")
-        if t_iter is not None and iters is not None:
-            t_iter, iters = float(t_iter), int(float(iters))
-        else:
-            if cfg is None:
-                raise ValueError(
-                    f"row {i}: no iteration structure in the CSV and no "
-                    "archs given to derive one from")
-            duration = float(_col(row, "duration") or 3600.0)
-            t_iter = compute_time_per_iter(cfg.n_active_params(),
-                                           tokens_per_iter, profile)
-            iters = max(int(duration / t_iter), 10)
-        skew = _col(row, "skew")
-        if skew is not None:
-            skew = float(skew)
-        else:
-            skew = model_skew(cfg) if cfg is not None else 0.0
-        raw_id = _col(row, "job_id")
-        try:  # Philly ids like 'application_1506638472019_10258' -> row index
-            job_id = int(float(raw_id)) if raw_id is not None else i
-        except ValueError:
-            job_id = i
-        jobs.append(Job(job_id=job_id, model=model or "unknown", n_gpus=g,
-                        total_iters=iters, compute_time_per_iter=t_iter,
-                        arrival=arrival, skew=skew))
+        jobs.append(job)
     # datetime-stamped traces: shift so the first submission is t=0
     # (numeric arrivals pass through untouched — exact round-trip)
     if saw_datetime and jobs:
         t0 = min(j.arrival for j in jobs)
         for j in jobs:
             j.arrival -= t0
+    # submission order: arrivals ascending, ids break ties (stable on the
+    # file's row order for equal (arrival, id) pairs)
+    jobs.sort(key=lambda j: (j.arrival, j.job_id))
     # colliding ids (duplicates in the file, or row-index fallbacks hitting
     # a real numeric id) would corrupt the simulator's job table — renumber
-    # everything by row order in that case
+    # densely in the FINAL sorted order, so the numbering is deterministic
+    # w.r.t. submission order rather than raw file order (the ascending ids
+    # leave the (arrival, job_id) sort unchanged)
     if len({j.job_id for j in jobs}) != len(jobs):
         for i, j in enumerate(jobs):
             j.job_id = i
-    jobs.sort(key=lambda j: (j.arrival, j.job_id))
     return jobs

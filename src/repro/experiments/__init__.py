@@ -8,6 +8,7 @@ from .runner import (  # noqa: F401
     ARTIFACT_SCHEMA_V3,
     ARTIFACT_SCHEMA_V4,
     ARTIFACT_SCHEMA_V5,
+    ARTIFACT_SCHEMA_V6,
     SimOverrides,
     artifact_json,
     run_one,

@@ -40,6 +40,13 @@ ARTIFACT_SCHEMA_V4 = "repro.experiments.artifact/v4"
 # scenario's FaultSpec enables degradation or telemetry: every other cell
 # keeps its v1-v4 bytes.
 ARTIFACT_SCHEMA_V5 = "repro.experiments.artifact/v5"
+# v6 = v5 + streamed-replay provenance: config.stream, the trace-source
+# description (config.trace_source — kind, seed/path, content sha256,
+# origin shift ...) and, when finished jobs spill to JSONL shards, the
+# shard manifest with per-shard digests (metrics.spill).  Emitted ONLY
+# when a cell streams its trace (scenario.stream or an injected
+# trace_source): every materialized cell keeps its v1-v5 bytes.
+ARTIFACT_SCHEMA_V6 = "repro.experiments.artifact/v6"
 
 # volatile keys excluded from determinism comparisons (populated by callers,
 # never by run_one itself)
@@ -80,8 +87,15 @@ class SimOverrides:
     naive_topology: bool = False
     comm: Optional[CommModel] = None
     archs: Optional[Sequence[Any]] = None
+    # streamed replay (schema v6): `stream` flips the scenario to lazy
+    # source-cursor ingestion, `spill_dir` spills finished-job records to
+    # JSONL shards there (constant memory), and `trace_source` injects a
+    # live TraceSource object (runtime-only, like comm/archs)
+    stream: Optional[bool] = None
+    spill_dir: Optional[str] = None
+    trace_source: Optional[Any] = None
 
-    _RUNTIME_ONLY = ("comm", "archs")
+    _RUNTIME_ONLY = ("comm", "archs", "trace_source")
 
     def __post_init__(self):
         if self.failures is None:
@@ -140,7 +154,8 @@ class SimOverrides:
         are ignored there, so defaults never clobber scenario fields)."""
         return dict(n_racks=self.n_racks, n_jobs=self.n_jobs,
                     max_time=self.max_time, contention_mode=self.contention,
-                    parallelism=self.parallelism, faults=self.faults)
+                    parallelism=self.parallelism, faults=self.faults,
+                    stream=self.stream)
 
 
 _DEFAULT_OVERRIDES = SimOverrides()
@@ -203,10 +218,25 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
     archs = ov.archs if ov.archs is not None else _archs()
     policy = policy or scenario.policy
     sim = scenario.build_sim(archs, policy=policy, seed=seed, comm=ov.comm,
-                             naive_topology=ov.naive_topology)
+                             naive_topology=ov.naive_topology,
+                             trace_source=ov.trace_source)
+    if ov.spill_dir:
+        if sim.source is None:
+            raise ValueError(
+                "SimOverrides.spill_dir requires a streamed cell "
+                "(scenario.stream / overrides.stream / trace_source)")
+        from repro.core.spill import SpillWriter
+        sim.attach_spill(SpillWriter(ov.spill_dir))
     metrics = sim.run(max_time=scenario.max_time)
+    config = scenario.config_dict()
     f = scenario.faults
-    if f is not None and (f.degradation or f.telemetry):
+    if sim.source is not None:
+        # streamed replay trumps the ladder: the source provenance (and
+        # any spill manifest inside metrics) only exists under v6
+        schema = ARTIFACT_SCHEMA_V6
+        config["stream"] = True
+        config["trace_source"] = sim.source.provenance()
+    elif f is not None and (f.degradation or f.telemetry):
         schema = ARTIFACT_SCHEMA_V5
     elif f is not None and f.mode:
         schema = ARTIFACT_SCHEMA_V4
@@ -221,7 +251,7 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
         "scenario": scenario.name,
         "policy": policy,
         "seed": seed,
-        "config": scenario.config_dict(),
+        "config": config,
         "metrics": metrics,
     }
 

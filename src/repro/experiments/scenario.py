@@ -33,6 +33,13 @@ from repro.core import (
 )
 from repro.core.fabric import DEFAULT_SPINE_X, DEFAULT_UPLINK_X
 from repro.core.policies import make_policy
+from repro.core.trace_source import (
+    STREAMING_MAKERS,
+    AlibabaPaiTrace,
+    HeliosCsvTrace,
+    MaterializedTrace,
+    TraceSource,
+)
 from repro.core.trace import (
     FAILURE_MODES,
     PARALLELISM_MODES,
@@ -112,10 +119,16 @@ class Scenario:
     rack_uplink_bw: Optional[float] = None  # bytes/s; None = 4x NIC rate
     spine_bw: Optional[float] = None        # bytes/s; None = 8x NIC rate
     # workload
-    trace: str = "batch"  # batch | poisson | bursty | mixed | csv
+    # batch | poisson | bursty | mixed | philly | csv | helios-csv | pai-csv
+    trace: str = "batch"
     n_jobs: int = 500
     trace_kw: Mapping[str, Any] = field(default_factory=dict)
     csv_path: Optional[str] = None
+    # streamed replay: pull arrivals lazily from a TraceSource cursor
+    # instead of pre-heaping the whole trace (constant-memory; schema v6).
+    # The event sequence is bit-identical either way — streaming changes
+    # provenance and memory, never the simulated schedule.
+    stream: bool = False
     # hybrid-parallelism plans: None (pure DP, v1-identical) or "auto"
     # (per-job DP/TP/PP/EP plans derived from model family and demand)
     parallelism: Optional[str] = None
@@ -292,13 +305,13 @@ class Scenario:
         raise ValueError(  # FaultSpec validates; direct field poking lands here
             f"scenario {self.name!r}: unknown degradation mode {mode!r}")
 
-    def build_trace(self, archs, seed: int):
+    def _check_trace_kinds(self):
         if self.parallelism not in PARALLELISM_MODES:
             raise ValueError(
                 f"scenario {self.name!r}: unknown parallelism "
                 f"{self.parallelism!r}; known: "
                 f"{', '.join(str(m) for m in PARALLELISM_MODES)}")
-        if self.trace == "csv":
+        if self.trace in ("csv", "helios-csv", "pai-csv"):
             if not self.csv_path:
                 raise ValueError(
                     f"scenario {self.name!r} replays a CSV trace; set "
@@ -306,12 +319,20 @@ class Scenario:
                     "or sweep --csv)")
             if self.parallelism is not None:
                 # refusing beats silently emitting v3 provenance for a
-                # feature the CSV trace cannot carry
+                # feature the CSV trace cannot carry (plan columns, when
+                # present, ride in on the jobs themselves)
                 raise ValueError(
                     f"scenario {self.name!r}: parallelism="
                     f"{self.parallelism!r} is not supported for CSV "
-                    "replays (the trace carries no plan columns)")
+                    "replays (the trace carries no derivable plans)")
+
+    def build_trace(self, archs, seed: int):
+        self._check_trace_kinds()
+        if self.trace == "csv":
             return load_csv_trace(self.csv_path, archs, **dict(self.trace_kw))
+        if self.trace in ("helios-csv", "pai-csv"):
+            # the adapters are streaming-native; materialize by draining
+            return list(self.build_trace_source(archs, seed))
         kw = dict(self.trace_kw)
         if self.parallelism is not None:
             kw["parallelism"] = self.parallelism
@@ -320,13 +341,46 @@ class Scenario:
         maker = TRACE_MAKERS[self.trace]
         return maker(archs, n_jobs=self.n_jobs, seed=seed, **kw)
 
+    def build_trace_source(self, archs, seed: int) -> TraceSource:
+        """The cell's streaming :class:`TraceSource` — the lazy twin of
+        :meth:`build_trace`, emitting the SAME jobs in the same
+        submission order.  Synthetic kinds with a streaming twin
+        (batch / poisson / philly / mixed) and the CSV adapters emit
+        one job at a time in O(1)/O(#rows·24B) memory; kinds whose
+        construction is inherently whole-trace (bursty's flash-crowd
+        sort, the legacy ``csv`` loader) fall back to a
+        :class:`MaterializedTrace` wrapper — same jobs, not
+        constant-memory."""
+        self._check_trace_kinds()
+        if self.trace == "helios-csv":
+            return HeliosCsvTrace(self.csv_path, archs,
+                                  **dict(self.trace_kw))
+        if self.trace == "pai-csv":
+            return AlibabaPaiTrace(self.csv_path, archs,
+                                   **dict(self.trace_kw))
+        maker = STREAMING_MAKERS.get(self.trace)
+        if maker is None:
+            return MaterializedTrace(self.build_trace(archs, seed))
+        kw = dict(self.trace_kw)
+        if self.parallelism is not None:
+            kw["parallelism"] = self.parallelism
+            kw.setdefault("gpus_per_machine", self.gpus_per_machine)
+        return maker(archs, n_jobs=self.n_jobs, seed=seed, **kw)
+
     def build_sim(self, archs, policy: Optional[str] = None, seed: int = 0,
                   comm: Optional[CommModel] = None,
                   naive_topology: bool = False,
-                  submit_trace: bool = True) -> ClusterSimulator:
+                  submit_trace: bool = True,
+                  trace_source: Optional[TraceSource] = None
+                  ) -> ClusterSimulator:
         """Build the cell's simulator.  ``submit_trace=False`` builds the
         cluster/network/failure regime but submits no jobs — the service
-        daemon's open-world mode, where arrivals come from the inbox."""
+        daemon's open-world mode, where arrivals come from the inbox.
+
+        When ``self.stream`` is set (or an explicit ``trace_source`` is
+        injected), the trace is attached as a lazy source cursor instead
+        of being submitted up front: identical event sequence, constant
+        memory."""
         cluster = self.build_cluster(naive_topology=naive_topology)
         # machines that actually hold GPUs (pre-allocation: full capacity),
         # excluding the empty stride slots of heterogeneous topologies
@@ -358,8 +412,13 @@ class Scenario:
                                fabric=fabric,
                                telemetry=telemetry)
         if submit_trace:
-            for job in self.build_trace(archs, seed):
-                sim.submit(job)
+            if trace_source is not None:
+                sim.attach_source(trace_source)
+            elif self.stream:
+                sim.attach_source(self.build_trace_source(archs, seed))
+            else:
+                for job in self.build_trace(archs, seed):
+                    sim.submit(job)
         return sim
 
     def config_dict(self) -> Dict[str, Any]:
@@ -420,6 +479,11 @@ class Scenario:
                 f.degradation, dict(f.degradation_kw))
         if f is not None and f.telemetry:
             out["telemetry"] = True
+        # schema-v6 key (streamed replay), same contract: emitted only
+        # when streaming is on, so every materialized cell keeps its
+        # v1-v5 bytes
+        if self.stream:
+            out["stream"] = True
         return out
 
 
@@ -671,3 +735,29 @@ register(Scenario(
     contention_mode="fair-share", spine_bw=50e9,
     faults=FaultSpec(degradation="mixed"),
     trace="batch", n_jobs=300))
+
+# -- streamed replay (constant-memory trace sources, schema v6) ---------------
+# Million-job cells from public GPU-cluster traces (Weng et al. 2022's PAI
+# GPU-2020 task table ships ~1.2M tasks): the trace streams through a lazy
+# source cursor and finished jobs spill to JSONL shards, so peak RSS stays
+# flat as the trace grows.  benchmarks/fig17_replay.py measures exactly that
+# and checks simulated utilization against the trace's recorded utilization.
+register(Scenario(
+    "million-replay",
+    description="1024 machines streaming a 1M-job synthetic Philly-style "
+    "trace through the lazy source cursor — the constant-memory cell "
+    "fig17 replays (peak RSS stays flat as the trace grows)",
+    n_racks=128, trace="philly", stream=True, n_jobs=1_000_000,
+    trace_kw={"mean_interarrival": 8.0}))
+register(Scenario(
+    "pai-replay",
+    description="streamed replay of an Alibaba PAI GPU-2020 task table "
+    "(cluster-trace-gpu-v2020 schema; needs csv_path override / sweep "
+    "--csv): task rows aggregate per job on a single scan pass",
+    n_racks=32, trace="pai-csv", stream=True, n_jobs=0))
+register(Scenario(
+    "helios-replay",
+    description="csv-replay's constant-memory twin: stream an external "
+    "Philly/Helios-style CSV off the file without materializing it "
+    "(needs csv_path override / sweep --csv)",
+    trace="helios-csv", stream=True, n_jobs=0))

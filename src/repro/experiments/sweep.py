@@ -38,13 +38,33 @@ def _cell_name(scenario: str, policy: str, seed: int) -> str:
     return f"{scenario}__{policy}__seed{seed}.json"
 
 
+def _peak_rss_mb() -> Optional[float]:
+    """This process's lifetime peak RSS in MB (None off-POSIX).  With
+    pooled workers a cell's row reports the worker's max-so-far — an
+    upper bound, monotone within a worker — which is exactly the signal
+    the streamed-replay cells exist to keep flat."""
+    try:
+        import resource
+    except ImportError:  # pragma: no cover - non-POSIX
+        return None
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
 def _run_cell(task: Task, out_dir: str) -> dict:
     """Worker entry: simulate one cell, write its artifact, return a summary
     row for the index (artifacts stay on disk; only headlines travel back)."""
     scenario_name, csv_path, policy, seed, overrides = task
     t0 = time.time()
     if csv_path:
-        scenario = scenario_from_csv(csv_path, name=scenario_name)
+        scenario = get_scenario(scenario_name) \
+            if scenario_name in SCENARIOS else None
+        if scenario is not None and scenario.trace in ("helios-csv",
+                                                       "pai-csv"):
+            # the streamed adapters keep their registered scenario; only
+            # the file path is filled in
+            scenario = scenario.with_overrides(csv_path=csv_path)
+        else:
+            scenario = scenario_from_csv(csv_path, name=scenario_name)
     else:
         scenario = get_scenario(scenario_name)
     art = run_one(scenario, policy=policy, seed=seed,
@@ -52,7 +72,7 @@ def _run_cell(task: Task, out_dir: str) -> dict:
     path = pathlib.Path(out_dir) / _cell_name(scenario_name, policy, seed)
     path.write_text(artifact_json(art))
     m = art["metrics"]
-    return {
+    row = {
         "file": path.name,
         "scenario": scenario_name,
         "policy": policy,
@@ -63,8 +83,12 @@ def _run_cell(task: Task, out_dir: str) -> dict:
         "avg_utilization": m["avg_utilization"],
         "n_finished": m["n_finished"],
         "wedged": bool(m.get("wedged", False)),
+        "peak_rss_mb": _peak_rss_mb(),
         "wall_s": time.time() - t0,
     }
+    if "spill" in m:
+        row["spilled_jobs"] = m["spill"]["n_jobs"]
+    return row
 
 
 def sweep(scenarios: Sequence[str], policies: Sequence[str],
@@ -77,7 +101,8 @@ def sweep(scenarios: Sequence[str], policies: Sequence[str],
           failures: Optional[str] = None,
           degradation: Optional[str] = None,
           telemetry: bool = False,
-          naive_topology: bool = False) -> dict:
+          naive_topology: bool = False,
+          stream: bool = False, spill: bool = False) -> dict:
     """Run the full cross product and return the index dict."""
     out_dir = pathlib.Path(out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -89,11 +114,22 @@ def sweep(scenarios: Sequence[str], policies: Sequence[str],
     overrides = SimOverrides(n_jobs=n_jobs, n_racks=n_racks,
                              max_time=max_time, contention=contention,
                              parallelism=parallelism, faults=faults,
-                             naive_topology=naive_topology).to_dict()
-    tasks: List[Task] = [
-        (sc, csv if (csv and get_scenario(sc).trace == "csv") else None,
-         pol, seed, overrides)
-        for sc in scenarios for pol in policies for seed in seeds]
+                             naive_topology=naive_topology,
+                             stream=True if stream else None).to_dict()
+
+    def _task(sc: str, pol: str, seed: int) -> Task:
+        csv_kinds = ("csv", "helios-csv", "pai-csv")
+        task_csv = csv if (csv and get_scenario(sc).trace in csv_kinds) \
+            else None
+        ov = dict(overrides)
+        if spill:  # per-cell spill directory under the sweep output
+            ov["spill_dir"] = str(
+                out_dir / "spill" / f"{sc}__{pol}__seed{seed}")
+        return (sc, task_csv, pol, seed, ov)
+
+    tasks: List[Task] = [_task(sc, pol, seed)
+                         for sc in scenarios for pol in policies
+                         for seed in seeds]
     t0 = time.time()
     if workers > 1:
         # spawn: workers re-import cleanly (no forked JAX/threading state),
@@ -156,6 +192,16 @@ def main(argv=None) -> None:
     ap.add_argument("--telemetry", action="store_true",
                     help="record the Kalos-style per-interval telemetry "
                     "time-series in every artifact (schema v5)")
+    ap.add_argument("--stream", action="store_true",
+                    help="pull every scenario's trace lazily through a "
+                    "TraceSource cursor instead of pre-heaping it "
+                    "(identical artifacts modulo v6 provenance; constant "
+                    "arrival memory)")
+    ap.add_argument("--spill", action="store_true",
+                    help="spill finished-job records to JSONL shards under "
+                    "<out>/spill/<cell>/ instead of retaining them "
+                    "(requires a streamed cell; schema v6 artifacts record "
+                    "the shard digests)")
     ap.add_argument("--naive-topology", action="store_true",
                     help="time every cell on the retained linear-scan "
                     "topology (identical artifacts, pre-indexing wall "
@@ -179,7 +225,8 @@ def main(argv=None) -> None:
         n_jobs=args.n_jobs, n_racks=args.racks, max_time=args.max_time,
         contention=args.contention, parallelism=args.parallelism,
         failures=args.failures, degradation=args.degradation,
-        telemetry=args.telemetry, naive_topology=args.naive_topology)
+        telemetry=args.telemetry, naive_topology=args.naive_topology,
+        stream=args.stream, spill=args.spill)
     for r in index["runs"]:
         print(f"{r['scenario']:>18s} {r['policy']:>22s} seed{r['seed']} "
               f"makespan={r['makespan']/3600:8.1f}h "

@@ -32,6 +32,10 @@ def main(argv=None) -> None:
     ap.add_argument("--overrides", default=None,
                     help="SimOverrides as JSON, e.g. "
                     '\'{"failures": "mtbf", "n_racks": 4}\'')
+    ap.add_argument("--stream-trace", action="store_true",
+                    help="stream the scenario's trace in as background "
+                    "load through a lazy TraceSource cursor (inbox stays "
+                    "open; inbox job ids are offset into their own space)")
     ap.add_argument("--events-per-tick", type=int, default=200)
     ap.add_argument("--snapshot-every", type=int, default=500,
                     help="checkpoint the simulator every N stepped events")
@@ -53,7 +57,8 @@ def main(argv=None) -> None:
         args.state_dir, scenario=args.scenario, policy=args.policy,
         seed=args.seed, overrides=overrides, inbox=args.inbox,
         events_per_tick=args.events_per_tick,
-        snapshot_every=args.snapshot_every)
+        snapshot_every=args.snapshot_every,
+        stream_trace=args.stream_trace)
     with svc:
         art = svc.serve(tick_sleep=args.tick_sleep, throttle=args.throttle,
                         exit_when_idle=args.exit_when_idle,

@@ -39,6 +39,11 @@ from .journal import Journal
 SERVICE_SCHEMA = "repro.service/v1"
 SERVICE_ARTIFACT_SCHEMA = "repro.service.artifact/v1"
 
+#: inbox job ids start here when a streamed trace is attached — the
+#: source hands out dense ids from 0, and the two id spaces must never
+#: collide inside the simulator's job table
+INBOX_JOB_ID_BASE = 1_000_000_000
+
 
 class ServiceError(RuntimeError):
     pass
@@ -86,7 +91,8 @@ class SchedulerService:
                  overrides: Optional[SimOverrides] = None,
                  inbox: Optional[Union[str, pathlib.Path]] = None,
                  events_per_tick: int = 200,
-                 snapshot_every: int = 500):
+                 snapshot_every: int = 500,
+                 stream_trace: bool = False):
         self.state_dir = pathlib.Path(state_dir)
         self.state_dir.mkdir(parents=True, exist_ok=True)
         self.snap_dir = self.state_dir / "snapshots"
@@ -104,15 +110,16 @@ class SchedulerService:
         requested = {"scenario": scenario, "policy": policy,
                      "seed": seed if seed != 0 else None,
                      "overrides": (overrides.to_dict()
-                                   if overrides is not None else None)}
+                                   if overrides is not None else None),
+                     "stream_trace": True if stream_trace else None}
         if cfg_path.exists():
             self.config = json.loads(cfg_path.read_text())
             for key, val in requested.items():
-                if val is not None and val != self.config[key]:
+                if val is not None and val != self.config.get(key):
                     raise ServiceError(
                         f"state dir {self.state_dir} was created with "
-                        f"{key}={self.config[key]!r}; cannot reopen with "
-                        f"{key}={val!r}")
+                        f"{key}={self.config.get(key)!r}; cannot reopen "
+                        f"with {key}={val!r}")
         else:
             self.config = {
                 "schema": SERVICE_SCHEMA,
@@ -121,11 +128,14 @@ class SchedulerService:
                 "seed": seed,
                 "overrides": (overrides or SimOverrides()).to_dict(),
             }
+            if stream_trace:  # absent key keeps legacy config bytes
+                self.config["stream_trace"] = True
             cfg_path.write_text(json.dumps(self.config, indent=1,
                                            sort_keys=True))
 
         self._scenario = get_scenario(self.config["scenario"]).with_overrides(
             **SimOverrides.from_dict(self.config["overrides"]).scenario_kw())
+        self._stream = bool(self.config.get("stream_trace"))
         self._policy = self.config["policy"] or self._scenario.policy
         self._archs_by_name = _archs_by_name()
         self._archs = list(self._archs_by_name.values())
@@ -147,9 +157,16 @@ class SchedulerService:
         return self.state_dir / "journal.jsonl"
 
     def _fresh_sim(self) -> ClusterSimulator:
-        return self._scenario.build_sim(
+        sim = self._scenario.build_sim(
             self._archs, policy=self._policy, seed=self.config["seed"],
             submit_trace=False)
+        if self._stream:
+            # the scenario's trace streams in as background load while the
+            # inbox stays open; snapshots carry the source cursor, so
+            # recovery resumes the stream exactly where it was
+            sim.attach_source(self._scenario.build_trace_source(
+                self._archs, self.config["seed"]))
+        return sim
 
     def _recover(self) -> ClusterSimulator:
         records = Journal.read(self.journal_path)
@@ -209,7 +226,9 @@ class SchedulerService:
             raise DuplicateJobSpec(
                 f"spec name {spec.name!r} already accepted with different "
                 "content")
-        job_id = self._n_submits
+        # with a streamed trace attached, inbox ids live in their own
+        # (huge-offset) id space so they never collide with source ids
+        job_id = self._n_submits + (INBOX_JOB_ID_BASE if self._stream else 0)
         arrival = max(spec.arrival, self.sim.clock)
         job = spec.build_job(
             job_id, self._archs_by_name, arrival=arrival,
@@ -323,6 +342,9 @@ class SchedulerService:
             "n_submitted": self._n_submits,
             "metrics": self.sim.results(),
         }
+        if self.sim.source is not None:  # gated: legacy artifacts keep bytes
+            art["stream_trace"] = True
+            art["trace_source"] = self.sim.source.provenance()
         out = self.state_dir / "artifact.json"
         tmp = out.with_suffix(".tmp")
         tmp.write_text(artifact_json(art))

@@ -28,8 +28,9 @@ def test_registry_covers_paper_and_new_regimes():
         assert name in SCENARIOS
 
 
-@pytest.mark.parametrize("name", sorted(n for n in SCENARIOS
-                                        if SCENARIOS[n].trace != "csv"))
+@pytest.mark.parametrize(
+    "name", sorted(n for n in SCENARIOS  # csv kinds need a csv_path
+                   if not SCENARIOS[n].trace.endswith("csv")))
 def test_every_scenario_builds(name):
     sc = get_scenario(name).with_overrides(n_jobs=6)
     cluster = sc.build_cluster()

@@ -237,9 +237,12 @@ def test_profile_counters_opt_in_and_identical_results():
 
     plain = run(False)
     profiled = run(True)
-    assert "profile" not in plain
+    assert "profile" not in plain and "profile_gauges" not in plain
     prof = profiled.pop("profile")
+    gauges = profiled.pop("profile_gauges")
     assert profiled == plain  # the counters must not touch the schedule
+    assert gauges["event_queue_depth"] >= 1
+    assert gauges["peak_rss_kb"] > 0
     for phase in ("scheduling_round", "offer_pass", "rack_yield_scan",
                   "upgrade_scan", "tuner_query"):
         assert prof[phase]["calls"] > 0, phase

@@ -1,0 +1,124 @@
+"""Streaming-vs-materialized differential suite: whole-cell artifacts.
+
+The lazy-ingestion contract is *byte*-identity, not statistical
+similarity: a cell run through a streamed TraceSource cursor (and,
+orthogonally, with finished-job spill attached) must produce exactly the
+metrics dict of the same cell with its trace materialized and submitted
+up front.  Regimes covered: baseline, shared fabric (contention
+re-pricing), failure churn, plan-bearing (parallelism="auto") jobs, and
+the bursty maker that has no streaming twin (MaterializedTrace
+fallback).  Plus: the v6 schema stamp, spill integrity, spill-dir
+precondition, snapshot/restore with a live source cursor, and the
+SimProfile queue-depth / peak-RSS gauges.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.profile import SimProfile
+from repro.core.simulator import ClusterSimulator
+from repro.core.spill import read_spilled, verify_manifest
+from repro.experiments import (
+    ARTIFACT_SCHEMA_V6,
+    SimOverrides,
+    get_scenario,
+    run_one,
+)
+
+ARCH_LIST = list(ARCHS.values())
+
+#: (scenario, policy, n_jobs) — one cell per regime the simulator
+#: branches on; small n_jobs keeps the suite in CI time
+CELLS = [
+    ("smoke", None, 20),
+    ("congested-spine", "scatter", 24),   # fabric on
+    ("failure-prone", None, 24),          # failure schedule on
+    ("moe-heavy", None, 16),              # plan-bearing jobs
+    ("bursty-diurnal", None, 16),         # no twin -> materialized fallback
+]
+
+
+def _dumps(d):
+    return json.dumps(d, sort_keys=True)
+
+
+@pytest.mark.parametrize("name,policy,n_jobs", CELLS)
+def test_streamed_artifact_matches_materialized(name, policy, n_jobs):
+    mat = run_one(name, policy=policy, seed=0,
+                  overrides=SimOverrides(n_jobs=n_jobs))
+    srt = run_one(name, policy=policy, seed=0,
+                  overrides=SimOverrides(n_jobs=n_jobs, stream=True))
+    # identical physics, different schema: v6 records the provenance
+    assert _dumps(srt["metrics"]) == _dumps(mat["metrics"])
+    assert srt["schema"] == ARTIFACT_SCHEMA_V6
+    assert mat["schema"] != ARTIFACT_SCHEMA_V6
+    cfg = dict(srt["config"])
+    assert cfg.pop("stream") is True
+    assert cfg.pop("trace_source")["kind"]
+    assert cfg == mat["config"]
+
+
+def test_spill_artifact_identical_and_verified(tmp_path):
+    plain = run_one("smoke", seed=0,
+                    overrides=SimOverrides(n_jobs=30, stream=True))
+    sp = run_one("smoke", seed=0,
+                 overrides=SimOverrides(n_jobs=30, stream=True,
+                                        spill_dir=str(tmp_path)))
+    m = dict(sp["metrics"])
+    manifest = m.pop("spill")
+    assert _dumps(m) == _dumps(plain["metrics"])
+    assert verify_manifest(manifest) is None
+    records = list(read_spilled(tmp_path))
+    assert len(records) == m["n_finished"]
+    finish_times = [r["finish_time"] for r in records]
+    assert finish_times == sorted(finish_times)  # completion order
+
+
+def test_spill_requires_streamed_cell(tmp_path):
+    with pytest.raises(ValueError, match="streamed"):
+        run_one("smoke", seed=0,
+                overrides=SimOverrides(n_jobs=10, spill_dir=str(tmp_path)))
+
+
+def test_snapshot_restore_with_live_source_cursor():
+    sc = get_scenario("smoke").with_overrides(n_jobs=40, stream=True)
+    ref = sc.build_sim(ARCH_LIST, seed=0).run()
+
+    sim = sc.build_sim(ARCH_LIST, seed=0)
+    sim.begin()
+    sim.step_events(37)  # mid-run: the cursor has jobs left to pull
+    assert sim.source.peek_arrival() is not None
+    blob = sim.snapshot_bytes()
+    resumed = ClusterSimulator.restore(blob)
+    # both the restored copy and the original drain byte-identically
+    assert _dumps(resumed.run()) == _dumps(ref)
+    assert _dumps(sim.run()) == _dumps(ref)
+
+
+def test_snapshot_refused_while_spilling(tmp_path):
+    from repro.core.spill import SpillWriter
+    sc = get_scenario("smoke").with_overrides(n_jobs=10, stream=True)
+    sim = sc.build_sim(ARCH_LIST, seed=0)
+    sim.attach_spill(SpillWriter(tmp_path))
+    with pytest.raises(RuntimeError, match="spill"):
+        sim.snapshot_bytes()
+
+
+def test_profile_gauges_report_queue_depths_and_rss():
+    sc = get_scenario("smoke").with_overrides(n_jobs=15)
+    sim = sc.build_sim(ARCH_LIST, seed=0)
+    sim.profile = SimProfile()
+    m = sim.run()
+    g = m["profile_gauges"]
+    assert g["event_queue_depth"] >= 1
+    assert g["running_jobs"] >= 1
+    assert "wait_queue_depth" in g
+    assert g["peak_rss_kb"] > 0
+    # gauges are max-keeping high-water marks
+    p = SimProfile()
+    p.gauge("x", 3.0)
+    p.gauge("x", 1.0)
+    assert p.gauges["x"] == 3.0

@@ -57,13 +57,19 @@ def fill_inbox(inbox: pathlib.Path, specs) -> None:
         (inbox / f"{s['name']}.json").write_text(json.dumps(s))
 
 
-def daemon_cmd(state_dir, inbox, overrides, *extra) -> list:
+def daemon_cmd(state_dir, inbox, overrides, *extra, stream=False) -> list:
     cmd = [sys.executable, "-m", "repro.service",
            "--state-dir", str(state_dir), "--inbox", str(inbox),
            "--scenario", "smoke", "--events-per-tick", "5",
            "--snapshot-every", "25", "--tick-sleep", "0.01"]
     if overrides:
         cmd += ["--overrides", json.dumps(overrides)]
+    if stream:
+        # the scenario's 60-job trace streams in through the lazy source
+        # cursor alongside the inbox; snapshot-every=25 means the first
+        # snapshot lands while the cursor is mid-stream, so the kill
+        # exercises cursor pickling + byte-identical resume
+        cmd += ["--stream-trace"]
     return cmd + list(extra)
 
 
@@ -96,6 +102,10 @@ def main(argv=None) -> int:
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--n-specs", type=int, default=20)
     ap.add_argument("--overrides", default='{"contention": "fair-share"}')
+    ap.add_argument("--stream", action="store_true",
+                    help="attach the scenario trace as a streamed source "
+                    "(--stream-trace): proves the source cursor rides the "
+                    "snapshot and recovery stays byte-identical")
     ap.add_argument("--kill-timeout", type=float, default=120.0)
     args = ap.parse_args(argv)
 
@@ -108,7 +118,7 @@ def main(argv=None) -> int:
     ref_inbox, ref_state = work / "ref-inbox", work / "ref-state"
     fill_inbox(ref_inbox, specs)
     subprocess.run(daemon_cmd(ref_state, ref_inbox, overrides,
-                              "--exit-when-idle"),
+                              "--exit-when-idle", stream=args.stream),
                    check=True, env=env(), cwd=REPO, timeout=600)
     ref = digest(ref_state / "artifact.json")
     print(f"reference digest: {ref}")
@@ -117,7 +127,8 @@ def main(argv=None) -> int:
     inbox, state = work / "inbox", work / "state"
     fill_inbox(inbox, specs)
     proc = subprocess.Popen(
-        daemon_cmd(state, inbox, overrides, "--throttle", "0.05"),
+        daemon_cmd(state, inbox, overrides, "--throttle", "0.05",
+                   stream=args.stream),
         env=env(), cwd=REPO)
     journal = state / "journal.jsonl"
     deadline = time.time() + args.kill_timeout
@@ -144,7 +155,8 @@ def main(argv=None) -> int:
     print(f"killed daemon mid-run; journal at kill: {c}")
 
     # 4: recover and drain
-    subprocess.run(daemon_cmd(state, inbox, overrides, "--exit-when-idle"),
+    subprocess.run(daemon_cmd(state, inbox, overrides, "--exit-when-idle",
+                              stream=args.stream),
                    check=True, env=env(), cwd=REPO, timeout=600)
     rec = digest(state / "artifact.json")
     print(f"recovered digest: {rec}")
