@@ -31,7 +31,13 @@ from repro.experiments.scenario import (
     get_scenario,
     register,
 )
-from repro.service import JobSpec, SchedulerService
+from repro.service import (
+    AdmissionPolicy,
+    AdmissionRejected,
+    JobSpec,
+    SchedulerService,
+    TenantLedger,
+)
 
 __all__ = [
     # experiment cells
@@ -42,4 +48,6 @@ __all__ = [
     "POLICIES", "make_policy",
     # the simulator and the online service around it
     "ClusterSimulator", "SchedulerService", "JobSpec",
+    # multi-tenancy (jobspec v2): admission control + per-tenant ledger
+    "AdmissionPolicy", "AdmissionRejected", "TenantLedger",
 ]

@@ -47,6 +47,7 @@ from .trace import (  # noqa: F401
     make_mixed_degradations,
     make_mixed_trace,
     make_mtbf_failures,
+    make_multi_tenant_trace,
     make_philly_trace,
     make_poisson_trace,
     make_rolling_maintenance,

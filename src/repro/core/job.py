@@ -20,6 +20,18 @@ try:  # optional: the batch scorers fall back to the scalar path without it
 except ImportError:  # pragma: no cover - numpy ships with the toolchain
     _np = None
 
+# -- priority classes --------------------------------------------------------
+# A job's priority class scales its policy priority VALUE (lower value =
+# served first, so the multiplier is > 1 for low-priority jobs and < 1 for
+# high-priority ones) and gates preemption: a waiting job may only evict
+# running jobs of an equal-or-lower class.  The class index doubles as the
+# eviction rank ("low" < "normal" < "high").  DEFAULT_PRIORITY keeps every
+# pre-existing trace and v1 job spec decision-identical: the multiplier is
+# only ever applied when a job's class differs from the default.
+PRIORITY_CLASSES = ("low", "normal", "high")
+PRIORITY_MULT = (4.0, 1.0, 0.25)
+DEFAULT_PRIORITY = PRIORITY_CLASSES.index("normal")
+
 
 @dataclass(eq=False)  # identity equality: O(1) list removal in the simulator
 class Job:
@@ -32,6 +44,11 @@ class Job:
     skew: float = 0.0            # largest tensor / model size (Tiresias)
     # hybrid-parallelism traffic plan; None = pure DP (the legacy path)
     plan: Optional[ParallelPlan] = None
+    # multi-tenancy: None = the shared default tenant (kept None, not
+    # materialized to a name, so single-tenant journals/artifacts keep
+    # their legacy bytes); priority is an index into PRIORITY_CLASSES
+    tenant: Optional[str] = None
+    priority: int = DEFAULT_PRIORITY
 
     # dynamic state ------------------------------------------------------
     iters_done: int = 0
@@ -154,3 +171,19 @@ def two_das_many(jobs: List[Job], now: float):
     t_run = live[0]
     n_gpus = _np.fromiter((j.n_gpus for j in jobs), _np.float64, len(jobs))
     return t_run * n_gpus
+
+
+def priority_mults_many(jobs: List[Job]):
+    """Per-job priority-class multipliers as a float64 array, or None when
+    every job is at the default class (or numpy is missing).
+
+    The None fast path is what keeps legacy populations decision-identical
+    AND bit-identical: callers skip the multiply entirely.  In a *mixed*
+    population the default jobs' scores are multiplied by exactly 1.0 —
+    an IEEE-754 identity (x * 1.0 == x bitwise for every finite x and for
+    the infs/nans that never occur here), so the vector path still matches
+    the guarded scalar path that skips the multiply for default jobs."""
+    if _np is None or all(j.priority == DEFAULT_PRIORITY for j in jobs):
+        return None
+    return _np.fromiter((PRIORITY_MULT[j.priority] for j in jobs),
+                        _np.float64, len(jobs))

@@ -164,3 +164,28 @@ def summarize(finished, timeline: Timeline, unfinished=()) -> Dict:
             "busy_gpus": timeline.busy_gpus,
         },
     }
+
+
+def tenant_summary(jobs, default_tenant: str = "default") -> Dict:
+    """Per-tenant accounting over a job population, keyed by tenant name
+    (jobs with no tenant bucket under ``default_tenant``).
+
+    Deterministic: jobs are folded in ascending ``job_id`` order, so the
+    float sums are byte-stable regardless of the caller's container
+    ordering.  Finished, running, and waiting jobs all contribute (their
+    dynamic state is whatever the simulation reached); rejected jobs never
+    entered the population and are accounted at the admission layer."""
+    out: Dict[str, Dict] = {}
+    for j in sorted(jobs, key=lambda j: j.job_id):
+        t = j.tenant if j.tenant is not None else default_tenant
+        d = out.get(t)
+        if d is None:
+            d = out[t] = {"n_jobs": 0, "n_finished": 0, "n_gpus_demanded": 0,
+                          "gpu_seconds": 0.0, "queue_seconds": 0.0}
+        d["n_jobs"] += 1
+        d["n_gpus_demanded"] += j.n_gpus
+        d["gpu_seconds"] += j.t_run * j.n_gpus
+        d["queue_seconds"] += j.t_queue
+        if j.finish_time is not None:
+            d["n_finished"] += 1
+    return {t: out[t] for t in sorted(out)}

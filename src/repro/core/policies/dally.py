@@ -12,7 +12,12 @@ import math
 from time import perf_counter
 
 from repro.core.autotuner import AutoTuner
-from repro.core.job import nw_sens_many
+from repro.core.job import (
+    DEFAULT_PRIORITY,
+    PRIORITY_MULT,
+    nw_sens_many,
+    priority_mults_many,
+)
 
 from .base import Policy
 
@@ -45,12 +50,26 @@ class DallyPolicy(Policy):
         # rack-yield victim index (see note_place / _tolerant_buckets_*)
         self._tolerant_by_rack = {}
 
-    # resource offers go out in increasing Nw_sens (most starved first)
+    # resource offers go out in increasing Nw_sens (most starved first);
+    # the priority-class multiplier inflates a low-priority job's score
+    # (served later, evicted sooner) and deflates a high-priority one.
+    # Guarded so default-class populations stay bit-identical.
     def priority(self, job, now):
-        return job.nw_sens(now)
+        v = job.nw_sens(now)
+        if job.priority != DEFAULT_PRIORITY:
+            v *= PRIORITY_MULT[job.priority]
+        return v
 
     def priority_many(self, jobs, now):
-        return nw_sens_many(jobs, now)
+        out = nw_sens_many(jobs, now)
+        if out is None:
+            return None
+        mults = priority_mults_many(jobs)
+        if mults is not None:
+            # default-class entries multiply by exactly 1.0 — a bitwise
+            # no-op, so this matches the guarded scalar path per element
+            out = out * mults
+        return out
 
     def _timers(self, job, sim, now):
         # a job that cannot fit a machine/rack has the respective timer at

@@ -9,7 +9,7 @@
 """
 from __future__ import annotations
 
-from ..job import two_das_many
+from ..job import DEFAULT_PRIORITY, PRIORITY_MULT, priority_mults_many, two_das_many
 from .base import Policy
 
 try:
@@ -31,6 +31,12 @@ class TiresiasPolicy(Policy):
 
     def priority(self, job, now):
         das = job.two_das(now)
+        if job.priority != DEFAULT_PRIORITY:
+            # priority-class scaling on attained service: a low-priority
+            # job looks like it already consumed more GPU-time (sinks to
+            # deeper MLFQ levels sooner), a high-priority one less.  The
+            # guard keeps default-class populations bit-identical.
+            das *= PRIORITY_MULT[job.priority]
         level = 0
         for th in self.queue_thresholds:
             if das > th:
@@ -42,6 +48,11 @@ class TiresiasPolicy(Policy):
         das = two_das_many(jobs, now)
         if das is None:
             return None
+        mults = priority_mults_many(jobs)
+        if mults is not None:
+            # elementwise multiply matches the guarded scalar branch: a
+            # default-class job's das * 1.0 is a bitwise no-op
+            das = das * mults
         # level is a small exact integer (<= len(thresholds)), so the
         # float accumulation and level * 1e12 are exact, and the final
         # add matches the scalar int-level * 1e12 + arrival bit for bit

@@ -62,8 +62,8 @@ from typing import Callable, Dict, List, Optional
 
 from .commmodel import CommModel
 from .fabric import FairShareFabric
-from .job import Job
-from .metrics import Timeline
+from .job import PRIORITY_CLASSES, Job
+from .metrics import Timeline, tenant_summary
 from .profile import SimProfile
 from .telemetry import Telemetry, link_key
 from .topology import ClusterTopology
@@ -82,6 +82,10 @@ _WAIT_KEY = attrgetter("_wait_key")
 # array-construction overhead; a pure performance knob — both paths are
 # bit-identical (the differential suite forces and compares each)
 _VEC_MIN_VICTIMS = 128
+
+# the top priority class: a victim scan gated at this class filters
+# nothing, so it is the "no gate" default for legacy callers
+_MAX_PRIORITY_CLASS = len(PRIORITY_CLASSES) - 1
 
 
 class ClusterSimulator:
@@ -152,6 +156,10 @@ class ClusterSimulator:
         # policy machinery (Dally's rack-slot yielding) can skip its
         # per-round waiting-queue scan entirely on plan-less workloads
         self.any_plans = False
+        # True once any submitted job names a tenant: gates the per-tenant
+        # summary key in results(), so single-tenant (legacy) artifacts
+        # keep their exact bytes
+        self.any_tenants = False
         self.timeline = Timeline()
         self.machine_slowdown: Dict[int, float] = {}
         for t, machine, factor in (slowdown_events or []):
@@ -274,6 +282,8 @@ class ClusterSimulator:
         self.jobs[job.job_id] = job
         if job.plan is not None:
             self.any_plans = True
+        if job.tenant is not None:
+            self.any_tenants = True
         self._pending_arrivals += 1
         self._push(job.arrival, ARRIVAL, job.job_id)
 
@@ -320,6 +330,8 @@ class ClusterSimulator:
             self.jobs[job.job_id] = job
             if job.plan is not None:
                 self.any_plans = True
+            if job.tenant is not None:
+                self.any_tenants = True
             self._pending_arrivals += 1
             self._push(job.arrival, ARRIVAL, job.job_id)
             return
@@ -564,7 +576,8 @@ class ClusterSimulator:
         # "network" can always re-host the job's own GPUs — never an upgrade
         return None
 
-    def _preemption_victims(self, now: float, threshold: float, prio):
+    def _preemption_victims(self, now: float, threshold: float, prio,
+                            evictor_class: int = _MAX_PRIORITY_CLASS):
         """Running jobs eligible for preemption, worst (highest priority
         value) first.  The vectorized path scores the whole running set
         in one numpy batch (``Policy.priority_many`` — bit-identical
@@ -572,13 +585,21 @@ class ClusterSimulator:
         which reproduces ``sorted(key=lambda j: -prio(j))`` exactly,
         original-order tie-break included.  The scalar scan is retained
         as the no-numpy fallback and as the reference the differential
-        suite pins the vector path against."""
+        suite pins the vector path against.
+
+        ``evictor_class`` is the priority class of the waiting job doing
+        the evicting: a running job of a strictly higher class is never a
+        victim, regardless of its score (the preemption-class gate).  The
+        default is the top class, i.e. no gate — and since every job's
+        class defaults to ``DEFAULT_PRIORITY``, all-default populations
+        filter identically to the ungated legacy scan."""
         min_rt = self.preemption_min_runtime
-        # runtime eligibility first — an attribute compare, much cheaper
-        # than a priority score, and in high-churn regimes it discards
-        # most of the running set before anything gets scored
+        # runtime + class eligibility first — attribute compares, much
+        # cheaper than a priority score, and in high-churn regimes they
+        # discard most of the running set before anything gets scored
         elig = [j for j in self.running
-                if now - j.last_assignment_time > min_rt]
+                if now - j.last_assignment_time > min_rt
+                and j.priority <= evictor_class]
         if len(elig) >= _VEC_MIN_VICTIMS:
             prios = self.policy.priority_many(elig, now)
             if prios is not None:
@@ -751,7 +772,8 @@ class ClusterSimulator:
                     # and preemption never tripped — exactly the congested
                     # regime it exists for
                     victims = self._preemption_victims(
-                        now, top_p + self.policy.preemption_margin, prio)
+                        now, top_p + self.policy.preemption_margin, prio,
+                        evictor_class=top.priority)
                     if prof is not None:
                         prof.add("preemption_scan", perf_counter() - t_scan)
                     freed = self.cluster.free_gpus()
@@ -1215,6 +1237,12 @@ class ClusterSimulator:
             out = summarize(self.finished, self.timeline,
                             unfinished=self.running + self.waiting)
         out["n_rejected"] = self.n_rejected
+        if self.any_tenants and self._spill is None:
+            # only when some job actually named a tenant: single-tenant
+            # (legacy) artifacts keep their exact bytes.  Spill runs drop
+            # finished jobs from memory, so the per-tenant fold is a
+            # materialized-mode surface (as is the ledger in the service).
+            out["tenants"] = tenant_summary(self.jobs.values())
         if self.fabric is not None:
             # only under a shared fabric: adding the key unconditionally
             # would break v1 artifact byte-compatibility

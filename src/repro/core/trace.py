@@ -24,7 +24,7 @@ from typing import List, Optional, Sequence
 
 from repro.types import TPU_V5E, HardwareProfile
 
-from .job import Job
+from .job import PRIORITY_CLASSES, Job
 from .parallelism import ParallelPlan, plan_for
 
 PARALLELISM_MODES = (None, "auto")
@@ -305,6 +305,48 @@ def make_philly_trace(archs: Sequence, n_jobs: int = 10_000, seed: int = 0,
     kw.setdefault("demand_pmf", PHILLY_GPU_PMF)
     return _make_jobs(n_jobs, arrivals, archs, seed,
                       median_gpu_hours=median_gpu_hours, sigma=sigma, **kw)
+
+
+# Helios-style tenancy skew (Hu et al., arXiv 2109.01313): a handful of
+# tenants dominate GPU-hours while the long tail submits small jobs.  The
+# default shares and priority mix below encode that shape at CI scale.
+DEFAULT_TENANTS = (("prod", 0.40), ("research", 0.30),
+                   ("mlops", 0.20), ("interns", 0.10))
+DEFAULT_PRIORITY_PMF = (("low", 0.30), ("normal", 0.55), ("high", 0.15))
+
+
+def make_multi_tenant_trace(archs: Sequence, n_jobs: int = 400,
+                            seed: int = 0,
+                            tenants=DEFAULT_TENANTS,
+                            priority_pmf=DEFAULT_PRIORITY_PMF,
+                            **kw) -> List[Job]:
+    """The datacenter mix with per-job tenant + priority-class labels.
+
+    The underlying jobs are EXACTLY ``make_mixed_trace``'s (same seed
+    offset, same draw order); tenant and priority assignment draws from a
+    separate rng stream (seed + 90_000), so the labelled trace differs
+    from its unlabelled twin only by the label fields — the scheduling of
+    an all-default-priority assignment would be decision-identical."""
+    jobs = make_mixed_trace(archs, n_jobs=n_jobs, seed=seed, **kw)
+    rng = random.Random(seed + 90_000)
+    for job in jobs:
+        job.tenant = _weighted_choice(rng, tenants)
+        job.priority = PRIORITY_CLASSES.index(
+            _weighted_choice(rng, priority_pmf))
+    return jobs
+
+
+def _weighted_choice(rng: random.Random, pmf):
+    """One draw from a ((value, weight), ...) pmf — the cumulative-scan
+    idiom `_sample_demand` uses, kept separate because values here are
+    labels, not GPU counts."""
+    r = rng.random()
+    acc = 0.0
+    for v, p in pmf:
+        acc += p
+        if r <= acc:
+            return v
+    return pmf[-1][0]
 
 
 # ---------------------------------------------------------------------------

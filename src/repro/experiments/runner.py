@@ -47,6 +47,11 @@ ARTIFACT_SCHEMA_V5 = "repro.experiments.artifact/v5"
 # when a cell streams its trace (scenario.stream or an injected
 # trace_source): every materialized cell keeps its v1-v5 bytes.
 ARTIFACT_SCHEMA_V6 = "repro.experiments.artifact/v6"
+# v7 = multi-tenant workloads: metrics.tenants (the per-tenant fold over
+# the job population — jobs carried tenant labels).  Emitted ONLY when
+# some job named a tenant (sim.any_tenants, materialized cells): every
+# single-tenant cell keeps its v1-v6 bytes.
+ARTIFACT_SCHEMA_V7 = "repro.experiments.artifact/v7"
 
 # volatile keys excluded from determinism comparisons (populated by callers,
 # never by run_one itself)
@@ -236,6 +241,9 @@ def run_one(scenario: Union[Scenario, str], policy: Optional[str] = None,
         schema = ARTIFACT_SCHEMA_V6
         config["stream"] = True
         config["trace_source"] = sim.source.provenance()
+    elif sim.any_tenants:
+        # tenant-labelled population: metrics.tenants exists only here
+        schema = ARTIFACT_SCHEMA_V7
     elif f is not None and (f.degradation or f.telemetry):
         schema = ARTIFACT_SCHEMA_V5
     elif f is not None and f.mode:

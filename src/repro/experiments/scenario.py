@@ -28,6 +28,7 @@ from repro.core import (
     make_batch_trace,
     make_bursty_trace,
     make_mixed_trace,
+    make_multi_tenant_trace,
     make_philly_trace,
     make_poisson_trace,
 )
@@ -64,6 +65,7 @@ TRACE_MAKERS = {
     "bursty": make_bursty_trace,
     "mixed": make_mixed_trace,
     "philly": make_philly_trace,
+    "multi-tenant": make_multi_tenant_trace,
 }
 
 
@@ -558,6 +560,12 @@ register(Scenario(
     description="Helios-style mix: many small short jobs + a 15% tail of "
     "16-128 GPU production jobs (128 > one rack)",
     trace="mixed", n_jobs=400))
+register(Scenario(
+    "multi-tenant",
+    description="the datacenter mix with Helios-style tenant skew and "
+    "priority classes (low/normal/high): priority-scaled scoring + the "
+    "preemption-class gate, per-tenant metrics in the artifact (schema v7)",
+    trace="multi-tenant", n_jobs=400))
 register(Scenario(
     "straggler",
     description="paper-batch with 3x slowdown on four machines from t=0 "

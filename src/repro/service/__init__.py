@@ -15,7 +15,14 @@ from .daemon import (  # noqa: F401
 )
 from .jobspec import (  # noqa: F401
     JOBSPEC_SCHEMA,
+    JOBSPEC_SCHEMA_V2,
     JobSpec,
     JobSpecError,
 )
 from .journal import JOURNAL_SCHEMA, Journal  # noqa: F401
+from .tenancy import (  # noqa: F401
+    DEFAULT_TENANT,
+    AdmissionPolicy,
+    AdmissionRejected,
+    TenantLedger,
+)

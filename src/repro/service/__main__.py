@@ -14,6 +14,7 @@ import json
 from repro.experiments.runner import SimOverrides
 
 from .daemon import SchedulerService
+from .tenancy import AdmissionPolicy
 
 
 def main(argv=None) -> None:
@@ -32,6 +33,11 @@ def main(argv=None) -> None:
     ap.add_argument("--overrides", default=None,
                     help="SimOverrides as JSON, e.g. "
                     '\'{"failures": "mtbf", "n_racks": 4}\'')
+    ap.add_argument("--admission", default=None,
+                    help="AdmissionPolicy as JSON, e.g. "
+                    '\'{"max_waiting_jobs_per_tenant": 4, '
+                    '"max_waiting_gpus": 64}\' — rejected specs land in '
+                    "rejected/ and are journaled as admission records")
     ap.add_argument("--stream-trace", action="store_true",
                     help="stream the scenario's trace in as background "
                     "load through a lazy TraceSource cursor (inbox stays "
@@ -53,12 +59,14 @@ def main(argv=None) -> None:
 
     overrides = (SimOverrides.from_dict(json.loads(args.overrides))
                  if args.overrides else None)
+    admission = (AdmissionPolicy.from_dict(json.loads(args.admission))
+                 if args.admission else None)
     svc = SchedulerService(
         args.state_dir, scenario=args.scenario, policy=args.policy,
         seed=args.seed, overrides=overrides, inbox=args.inbox,
         events_per_tick=args.events_per_tick,
         snapshot_every=args.snapshot_every,
-        stream_trace=args.stream_trace)
+        stream_trace=args.stream_trace, admission=admission)
     with svc:
         art = svc.serve(tick_sleep=args.tick_sleep, throttle=args.throttle,
                         exit_when_idle=args.exit_when_idle,

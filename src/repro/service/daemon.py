@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
 import pathlib
 import time
 from typing import Any, Dict, Mapping, Optional, Union
@@ -33,8 +34,15 @@ from repro.core.simulator import ClusterSimulator
 from repro.experiments.runner import SimOverrides, artifact_json
 from repro.experiments.scenario import get_scenario
 
-from .jobspec import JobSpec, JobSpecError, job_from_dict, job_to_dict
+from .jobspec import (
+    JOBSPEC_SCHEMA_V2,
+    JobSpec,
+    JobSpecError,
+    job_from_dict,
+    job_to_dict,
+)
 from .journal import Journal
+from .tenancy import DEFAULT_TENANT, AdmissionPolicy, AdmissionRejected, TenantLedger
 
 SERVICE_SCHEMA = "repro.service/v1"
 SERVICE_ARTIFACT_SCHEMA = "repro.service.artifact/v1"
@@ -92,7 +100,8 @@ class SchedulerService:
                  inbox: Optional[Union[str, pathlib.Path]] = None,
                  events_per_tick: int = 200,
                  snapshot_every: int = 500,
-                 stream_trace: bool = False):
+                 stream_trace: bool = False,
+                 admission: Optional[AdmissionPolicy] = None):
         self.state_dir = pathlib.Path(state_dir)
         self.state_dir.mkdir(parents=True, exist_ok=True)
         self.snap_dir = self.state_dir / "snapshots"
@@ -111,7 +120,9 @@ class SchedulerService:
                      "seed": seed if seed != 0 else None,
                      "overrides": (overrides.to_dict()
                                    if overrides is not None else None),
-                     "stream_trace": True if stream_trace else None}
+                     "stream_trace": True if stream_trace else None,
+                     "admission": (admission.to_dict()
+                                   if admission is not None else None)}
         if cfg_path.exists():
             self.config = json.loads(cfg_path.read_text())
             for key, val in requested.items():
@@ -130,6 +141,8 @@ class SchedulerService:
             }
             if stream_trace:  # absent key keeps legacy config bytes
                 self.config["stream_trace"] = True
+            if admission is not None:  # same gating discipline
+                self.config["admission"] = admission.to_dict()
             cfg_path.write_text(json.dumps(self.config, indent=1,
                                            sort_keys=True))
 
@@ -137,6 +150,8 @@ class SchedulerService:
             **SimOverrides.from_dict(self.config["overrides"]).scenario_kw())
         self._stream = bool(self.config.get("stream_trace"))
         self._policy = self.config["policy"] or self._scenario.policy
+        self._admission = (AdmissionPolicy.from_dict(self.config["admission"])
+                           if self.config.get("admission") else None)
         self._archs_by_name = _archs_by_name()
         self._archs = list(self._archs_by_name.values())
 
@@ -146,6 +161,16 @@ class SchedulerService:
         self._n_submits = 0      # journaled submit records == next job_id
         self._n_snapshots = 0
         self._events_since_snap = 0
+        # per-tenant accounting (admission decisions read it; the op-hook
+        # stream feeds it).  Always maintained — its output is gated.
+        self.ledger = TenantLedger()
+        # auditable admission decisions in journal order (artifact form:
+        # no timestamps, so the log is a pure function of the submission
+        # sequence and survives crash recovery byte-identically)
+        self._admission_log = []
+        # True once any accepted spec used the v2 surface: gates the
+        # tenant keys in the artifact / cluster_state
+        self._any_mt_specs = False
 
         self.sim = self._recover()
         self.journal = Journal(self.journal_path)
@@ -155,6 +180,14 @@ class SchedulerService:
     @property
     def journal_path(self) -> pathlib.Path:
         return self.state_dir / "journal.jsonl"
+
+    @property
+    def _mt_active(self) -> bool:
+        """Multi-tenant surface engaged: an admission policy is configured
+        or some accepted spec used the v2 fields.  Gates the tenant keys
+        in the artifact and ``cluster_state()`` so single-tenant runs keep
+        their exact legacy bytes."""
+        return self._admission is not None or self._any_mt_specs
 
     def _fresh_sim(self) -> ClusterSimulator:
         sim = self._scenario.build_sim(
@@ -180,22 +213,61 @@ class SchedulerService:
             if path.exists() and _sha256_file(path) == rec["sha256"]:
                 sim = ClusterSimulator.restore(path.read_bytes())
                 replay_from = rec["n_submits"]
+                # the ledger state rides the snapshot marker: counters
+                # resume from the same instant the simulator does, and
+                # replayed post-snapshot ops re-fold exactly once
+                if "ledger" in rec:
+                    self.ledger.restore(rec["ledger"])
                 break
         if sim is None:
             sim = self._fresh_sim()
 
+        # registry first: pre-snapshot jobs still complete post-snapshot,
+        # and the op feed must resolve their tenant/n_gpus
+        for rec in submits:
+            self.ledger.register(job_from_dict(rec["job"]))
         for rec in submits[replay_from:]:
-            sim.submit(job_from_dict(rec["job"]))
+            job = job_from_dict(rec["job"])
+            self.ledger.note_submit(job)
+            sim.submit(job)
+            if job.job_id not in sim.jobs:
+                # capacity-rejected at submit time: in the live run the
+                # op hook folded this, but hooks aren't attached during
+                # recovery, so mirror the fold here
+                self.ledger.note_op("reject", sim.clock,
+                                    {"job_id": job.job_id})
         for rec in submits:
             self._specs[rec["spec"]["name"]] = rec["spec"]
             self._job_ids[rec["spec"]["name"]] = rec["seq"]
+            if rec["spec"].get("schema") == JOBSPEC_SCHEMA_V2:
+                self._any_mt_specs = True
         self._n_submits = len(submits)
+        # the admission audit log replays from its journal records (the
+        # artifact form strips the timestamps, so this is exact)
+        for rec in records:
+            if rec.get("type") == "admission":
+                self._admission_log.append(self._admission_entry(rec))
         return sim
+
+    @staticmethod
+    def _admission_entry(rec: Mapping[str, Any]) -> dict:
+        entry = {"name": rec["name"], "tenant": rec["tenant"],
+                 "n_gpus": rec["n_gpus"], "decision": rec["decision"]}
+        if "reason" in rec:
+            entry["reason"] = rec["reason"]
+        return entry
 
     def _attach_hooks(self) -> None:
         def op_hook(op, now, payload):
             self.journal.append({"type": "event", "op": op, "t": now,
                                  **payload})
+            # the same stream feeds the tenant ledger (the audit/billing
+            # seam); only a completion needs the job object, for the final
+            # t_run of the GPU-seconds fold
+            self.ledger.note_op(
+                op, now, payload,
+                job=(self.sim.jobs.get(payload.get("job_id"))
+                     if op == "complete" else None))
         self.sim.op_hook = op_hook
 
     def close(self) -> None:
@@ -226,6 +298,26 @@ class SchedulerService:
             raise DuplicateJobSpec(
                 f"spec name {spec.name!r} already accepted with different "
                 "content")
+        if self._admission is not None:
+            # reject-vs-queue happens BEFORE anything is journaled as
+            # accepted; the decision itself is journaled either way (the
+            # auditable `admission` record).  A rejection retains nothing,
+            # so the same name may be resubmitted once load drains.
+            reason = self._admission.decide(spec, self.ledger)
+            rec = {"type": "admission", "t": self.sim.clock,
+                   "name": spec.name,
+                   "tenant": (spec.tenant if spec.tenant is not None
+                              else DEFAULT_TENANT),
+                   "n_gpus": spec.n_gpus,
+                   "decision": "reject" if reason else "admit"}
+            if reason:
+                rec["reason"] = reason
+                self.journal.append(rec, durable=True)
+                self._admission_log.append(self._admission_entry(rec))
+                raise AdmissionRejected(reason)
+            # admit records ride the durable submit fsync just below
+            self.journal.append(rec)
+            self._admission_log.append(self._admission_entry(rec))
         # with a streamed trace attached, inbox ids live in their own
         # (huge-offset) id space so they never collide with source ids
         job_id = self._n_submits + (INBOX_JOB_ID_BASE if self._stream else 0)
@@ -239,6 +331,13 @@ class SchedulerService:
         self._specs[spec.name] = wire
         self._job_ids[spec.name] = job_id
         self._n_submits += 1
+        if wire["schema"] == JOBSPEC_SCHEMA_V2:
+            self._any_mt_specs = True
+        # accepted submissions count toward the snapshot cadence: a
+        # submit-heavy quiet cluster must still checkpoint, or recovery
+        # replay grows without bound (see tick)
+        self._events_since_snap += 1
+        self.ledger.note_submit(job)
         self.sim.submit(job)
         return job_id
 
@@ -258,7 +357,14 @@ class SchedulerService:
                 self.submit(spec)
                 accepted += self._n_submits - before
                 dest = self.inbox / "processed" / path.name
-            except (json.JSONDecodeError, JobSpecError) as e:
+            # quarantine ANY spec-derived failure, not just the validated
+            # ones: a type-malformed field that slips past validation
+            # surfaces as TypeError (e.g. a string where a number belongs)
+            # and must land in rejected/ instead of killing the daemon.
+            # JSONDecodeError / JobSpecError / DuplicateJobSpec are
+            # ValueError subclasses; infra errors (OSError) still raise.
+            except (AdmissionRejected, TypeError, ValueError,
+                    OverflowError) as e:
                 dest = self.inbox / "rejected" / path.name
                 (dest.parent / (path.name + ".error")).write_text(str(e))
             path.replace(dest)
@@ -277,7 +383,13 @@ class SchedulerService:
             self.events_per_tick if max_events is None else max_events)
         self.journal.flush()
         self._events_since_snap += stepped
-        if stepped and self._events_since_snap >= self.snapshot_every:
+        # accepted submissions count too (submit() increments the same
+        # counter): a submit-heavy quiet cluster — many journaled jobs,
+        # zero stepped events per tick — must still snapshot, or its
+        # recovery replay is unbounded.  The counter only moves with
+        # activity and snapshot() resets it, so an idle daemon never
+        # re-checkpoints.
+        if self._events_since_snap >= self.snapshot_every:
             self.snapshot()
         return stepped + accepted
 
@@ -317,13 +429,28 @@ class SchedulerService:
         path = self.snap_dir / name
         data = self.sim.snapshot_bytes()
         tmp = path.with_suffix(".tmp")
-        tmp.write_bytes(data)
+        # write + fsync the data, rename, then fsync the directory: the
+        # journaled marker below must never point at a snapshot whose
+        # pages (or directory entry) could still be lost to a power cut —
+        # rename-then-journal alone only orders the *names*, not the data
+        with open(tmp, "wb") as fh:
+            fh.write(data)
+            fh.flush()
+            os.fsync(fh.fileno())
         tmp.replace(path)
+        dir_fd = os.open(self.snap_dir, os.O_RDONLY)
+        try:
+            os.fsync(dir_fd)
+        finally:
+            os.close(dir_fd)
         self.journal.append({
             "type": "snapshot", "t": self.sim.clock,
             "file": str(path.relative_to(self.state_dir)),
             "sha256": hashlib.sha256(data).hexdigest(),
             "n_submits": self._n_submits,
+            # ledger counters ride the marker so recovery resumes the
+            # accounting from the same instant the simulator does
+            "ledger": self.ledger.as_dict(),
         }, durable=True)
         self._events_since_snap = 0
         return path
@@ -345,6 +472,17 @@ class SchedulerService:
         if self.sim.source is not None:  # gated: legacy artifacts keep bytes
             art["stream_trace"] = True
             art["trace_source"] = self.sim.source.provenance()
+        if self._mt_active:  # gated for the same reason
+            art["tenants"] = self.ledger.as_dict()
+        if self._admission is not None:
+            n_adm = sum(1 for e in self._admission_log
+                        if e["decision"] == "admit")
+            art["admission"] = {
+                "policy": self._admission.to_dict(),
+                "n_admitted": n_adm,
+                "n_rejected": len(self._admission_log) - n_adm,
+                "log": list(self._admission_log),
+            }
         out = self.state_dir / "artifact.json"
         tmp = out.with_suffix(".tmp")
         tmp.write_text(artifact_json(art))
@@ -391,6 +529,10 @@ class SchedulerService:
             # most recent per-machine busy/throughput + per-link effective
             # bandwidth sample (empty dicts before the first ROUND tick)
             state["telemetry"] = sim.telemetry.latest()
+        if self._mt_active:
+            # the live ledger: running/waiting GPUs and cumulative
+            # GPU-seconds per tenant (read-only — plain counter copies)
+            state["tenants"] = self.ledger.as_dict()
         tuner = getattr(sim.policy, "tuner", None)
         if tuner is not None:
             demands = sorted({j.n_gpus for j in sim.waiting})

@@ -8,10 +8,11 @@ makers do (``compute_time_per_iter`` from active-param FLOPs at 40% MFU,
 Tiresias skew from the real model schema, optional auto parallelism plan),
 so a spec-submitted job is indistinguishable from a trace-generated one.
 
-Wire schema (``repro.service.jobspec/v1``)::
+Wire schema (``repro.service.jobspec/v2``; v1 specs parse bit-identically
+and serialize back to the v1 schema string when no v2 field is set)::
 
     {
-      "schema": "repro.service.jobspec/v1",   # optional, validated if set
+      "schema": "repro.service.jobspec/v2",   # optional, validated if set
       "name": "team-a/llama-run-17",          # unique; the dedupe key
       "model": "yi-9b",                       # must be in repro.configs.ARCHS
       "n_gpus": 8,
@@ -20,7 +21,11 @@ Wire schema (``repro.service.jobspec/v1``)::
       "tokens_per_gpu_iter": 1024,            # optional (default 1024)
       "arrival": 3600.0,                      # optional simulated-seconds;
                                               # clamped up to the live clock
-      "parallelism": "auto"                   # optional; null = pure DP
+      "parallelism": "auto",                  # optional; null = pure DP
+      "tenant": "team-a",                     # v2, optional; null = the
+                                              # shared default tenant
+      "priority": "high"                      # v2, optional; one of
+                                              # low / normal / high
     }
 
 The derived ``Job`` (including the resolved iteration count and plan) is
@@ -33,7 +38,7 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Any, Mapping, Optional
 
-from repro.core.job import Job
+from repro.core.job import DEFAULT_PRIORITY, PRIORITY_CLASSES, Job
 from repro.core.parallelism import ParallelPlan, plan_for
 from repro.core.trace import (
     PARALLELISM_MODES,
@@ -42,11 +47,23 @@ from repro.core.trace import (
 )
 
 JOBSPEC_SCHEMA = "repro.service.jobspec/v1"
+JOBSPEC_SCHEMA_V2 = "repro.service.jobspec/v2"
+_KNOWN_SCHEMAS = (JOBSPEC_SCHEMA, JOBSPEC_SCHEMA_V2)
 MIN_ITERS = 10  # floor shared with the trace makers
 
 
 class JobSpecError(ValueError):
     """Spec failed validation (bad field, unknown model, missing size)."""
+
+
+def _num(v) -> bool:
+    """True for real JSON numbers.  bool is an int subclass in Python but
+    `true` is not a number on the wire — reject it explicitly."""
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _int(v) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool)
 
 
 @dataclass(frozen=True)
@@ -59,11 +76,19 @@ class JobSpec:
     tokens_per_gpu_iter: int = 1024
     arrival: float = 0.0
     parallelism: Optional[str] = None
+    # v2 fields: absent on the v1 wire; both unset => the spec round-trips
+    # with the v1 schema string, byte-identical to a pre-v2 service
+    tenant: Optional[str] = None
+    priority: Optional[str] = None  # one of PRIORITY_CLASSES
 
     def __post_init__(self):
+        # type-check every numeric field up front: a JSON-valid spec with
+        # a string arrival/gpu_hours used to escape validation and blow up
+        # later inside the daemon's submit() (TypeError, outside the
+        # inbox quarantine) — one bad file killed the service
         if not self.name or not isinstance(self.name, str):
             raise JobSpecError("spec needs a non-empty string 'name'")
-        if not isinstance(self.n_gpus, int) or self.n_gpus < 1:
+        if not _int(self.n_gpus) or self.n_gpus < 1:
             raise JobSpecError(
                 f"spec {self.name!r}: n_gpus must be a positive int, got "
                 f"{self.n_gpus!r}")
@@ -71,28 +96,53 @@ class JobSpec:
             raise JobSpecError(
                 f"spec {self.name!r}: set exactly one of gpu_hours / "
                 "total_iters")
-        if self.total_iters is not None and self.total_iters < 1:
+        if self.total_iters is not None and (
+                not _int(self.total_iters) or self.total_iters < 1):
             raise JobSpecError(
-                f"spec {self.name!r}: total_iters must be >= 1")
-        if self.gpu_hours is not None and not self.gpu_hours > 0:
+                f"spec {self.name!r}: total_iters must be an int >= 1, "
+                f"got {self.total_iters!r}")
+        if self.gpu_hours is not None and (
+                not _num(self.gpu_hours) or not self.gpu_hours > 0):
             raise JobSpecError(
-                f"spec {self.name!r}: gpu_hours must be > 0")
-        if self.arrival < 0:
-            raise JobSpecError(f"spec {self.name!r}: arrival must be >= 0")
+                f"spec {self.name!r}: gpu_hours must be a number > 0, "
+                f"got {self.gpu_hours!r}")
+        if not _int(self.tokens_per_gpu_iter) or self.tokens_per_gpu_iter < 1:
+            raise JobSpecError(
+                f"spec {self.name!r}: tokens_per_gpu_iter must be an int "
+                f">= 1, got {self.tokens_per_gpu_iter!r}")
+        if not _num(self.arrival) or self.arrival < 0:
+            raise JobSpecError(
+                f"spec {self.name!r}: arrival must be a number >= 0, got "
+                f"{self.arrival!r}")
         if self.parallelism not in PARALLELISM_MODES:
             raise JobSpecError(
                 f"spec {self.name!r}: unknown parallelism "
                 f"{self.parallelism!r}; known: "
                 f"{', '.join(str(m) for m in PARALLELISM_MODES)}")
+        if self.tenant is not None and (
+                not isinstance(self.tenant, str) or not self.tenant):
+            raise JobSpecError(
+                f"spec {self.name!r}: tenant must be a non-empty string, "
+                f"got {self.tenant!r}")
+        if self.priority is not None and self.priority not in PRIORITY_CLASSES:
+            raise JobSpecError(
+                f"spec {self.name!r}: unknown priority {self.priority!r}; "
+                f"known: {', '.join(PRIORITY_CLASSES)}")
+
+    def priority_class(self) -> int:
+        """The resolved priority-class index (``Job.priority``)."""
+        if self.priority is None:
+            return DEFAULT_PRIORITY
+        return PRIORITY_CLASSES.index(self.priority)
 
     # -- wire form ------------------------------------------------------
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "JobSpec":
         d = dict(d)
-        schema = d.pop("schema", JOBSPEC_SCHEMA)
-        if schema != JOBSPEC_SCHEMA:
+        schema = d.pop("schema", None)
+        if schema is not None and schema not in _KNOWN_SCHEMAS:
             raise JobSpecError(f"unknown job-spec schema {schema!r} "
-                               f"(expected {JOBSPEC_SCHEMA!r})")
+                               f"(expected one of {_KNOWN_SCHEMAS})")
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = sorted(set(d) - known)
         if unknown:
@@ -104,7 +154,10 @@ class JobSpec:
             raise JobSpecError(str(e)) from None
 
     def to_dict(self) -> dict:
-        out = {"schema": JOBSPEC_SCHEMA}
+        # a spec with no v2 field round-trips under the v1 schema string:
+        # the journal/dedupe wire form of every pre-v2 spec is unchanged
+        v2 = self.tenant is not None or self.priority is not None
+        out = {"schema": JOBSPEC_SCHEMA_V2 if v2 else JOBSPEC_SCHEMA}
         for f in dataclasses.fields(self):
             v = getattr(self, f.name)
             if f.default is dataclasses.MISSING or v != f.default:
@@ -136,7 +189,8 @@ class JobSpec:
         return Job(job_id=job_id, model=cfg.name, n_gpus=self.n_gpus,
                    total_iters=iters, compute_time_per_iter=t_iter,
                    arrival=self.arrival if arrival is None else arrival,
-                   skew=_cached_skew(cfg), plan=plan)
+                   skew=_cached_skew(cfg), plan=plan,
+                   tenant=self.tenant, priority=self.priority_class())
 
 
 # -- derived-Job wire form (what the journal replays) -----------------------
@@ -145,7 +199,7 @@ def job_to_dict(job: Job) -> dict:
     """The immutable identity of a Job — dynamic scheduling state is NOT
     serialized (recovery replays submissions onto a snapshot; the snapshot
     carries the dynamic state)."""
-    return {
+    out = {
         "job_id": job.job_id,
         "model": job.model,
         "n_gpus": job.n_gpus,
@@ -155,6 +209,13 @@ def job_to_dict(job: Job) -> dict:
         "skew": job.skew,
         "plan": dataclasses.asdict(job.plan) if job.plan else None,
     }
+    # emitted only when non-default: the journal `job` record of every
+    # default-tenant normal-priority job keeps its exact legacy bytes
+    if job.tenant is not None:
+        out["tenant"] = job.tenant
+    if job.priority != DEFAULT_PRIORITY:
+        out["priority"] = job.priority
+    return out
 
 
 def job_from_dict(d: Mapping[str, Any]) -> Job:

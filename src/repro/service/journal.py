@@ -13,9 +13,16 @@ One record per line, ``{"type": ...}``-discriminated:
   per tick, not fsynced per record, and recovery may re-emit a suffix of
   them (at-least-once).  They take no part in state reconstruction.
 * ``snapshot`` — a full pickled-simulator checkpoint landed on disk
-  (``file`` + ``sha256`` + the number of submits it contains).  Recovery
-  loads the newest snapshot that exists and verifies, then replays the
-  ``submit`` records after it.
+  (``file`` + ``sha256`` + the number of submits it contains, plus the
+  tenant-ledger counters as of that instant).  Recovery loads the newest
+  snapshot that exists and verifies, then replays the ``submit`` records
+  after it.
+* ``admission`` — one admission-control decision (``admit`` or ``reject``
+  with the reason), emitted only when an :class:`AdmissionPolicy` is
+  configured.  A reject record is fsynced *before* the rejection is
+  raised to the caller; an admit record rides the immediately following
+  durable ``submit``.  Recovery rebuilds the auditable admission log from
+  these; they take no part in simulator state reconstruction.
 
 The reader tolerates a truncated final line (the crash window of an
 append) and skips records of unknown type, so the format is forward-

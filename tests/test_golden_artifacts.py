@@ -73,6 +73,15 @@ EXPECTED_V5 = {
         "6b87409037350d0cda4361e6c75fc7021b4bfdf93b2be2242971a1683d8634dc",
 }
 
+# multi-tenant cell (schema v7): tenant-labelled mixed-priority workload —
+# pins the priority-class multipliers on the scoring paths, the
+# preemption-class gate, and the per-tenant metrics fold (incl. the float
+# gpu_seconds sums, whose fold order is pinned by the sorted job walk).
+EXPECTED_V7 = {
+    ("multi-tenant", "dally", 0, 32):
+        "02da91f5e597c5b24b5d07116f9efb04a81bfe8f67ff8d5a5ca2d2c495087f28",
+}
+
 
 def _digest(scenario, policy, seed, n_jobs,
             schema="repro.experiments.artifact/v1"):
@@ -106,6 +115,10 @@ def test_golden_artifact_digests_v4_failures():
 
 def test_golden_artifact_digests_v5_degradation():
     _check(EXPECTED_V5, "repro.experiments.artifact/v5")
+
+
+def test_golden_artifact_digests_v7_multitenant():
+    _check(EXPECTED_V7, "repro.experiments.artifact/v7")
 
 
 def test_golden_artifacts_are_volatile_free():

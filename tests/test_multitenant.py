@@ -1,0 +1,406 @@
+"""Multi-tenant surface: jobspec v2 (tenant / priority), admission
+control, the tenant ledger, priority-scaled scheduling, and the
+preemption-class gate.
+
+Two invariants anchor everything here:
+
+* decision-identity — every job at the default priority class and no
+  admission policy configured must produce bit-identical schedules and
+  artifacts to the pre-v2 code (the golden-digest suite pins the bytes;
+  this file pins the mechanisms: guarded multiplies, the ungated victim
+  scan, the absent-key wire forms);
+* recovery-identity — the ledger and the admission log are part of the
+  crash-recovery byte-identity claim, exactly like the simulator state.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (
+    ClusterSimulator,
+    ClusterTopology,
+    CommModel,
+    make_mixed_trace,
+    make_multi_tenant_trace,
+)
+from repro.core.job import (
+    DEFAULT_PRIORITY,
+    PRIORITY_CLASSES,
+    PRIORITY_MULT,
+    Job,
+    priority_mults_many,
+)
+from repro.core.policies import make_policy
+from repro.experiments import SimOverrides, run_one
+from repro.service import (
+    JOBSPEC_SCHEMA,
+    JOBSPEC_SCHEMA_V2,
+    AdmissionPolicy,
+    AdmissionRejected,
+    JobSpec,
+    JobSpecError,
+    Journal,
+    SchedulerService,
+    TenantLedger,
+)
+from repro.service.tenancy import DEFAULT_TENANT
+
+ARCHS_L = list(ARCHS.values())
+COMM = CommModel.from_configs(ARCHS_L)
+
+LOW = PRIORITY_CLASSES.index("low")
+NORMAL = PRIORITY_CLASSES.index("normal")
+HIGH = PRIORITY_CLASSES.index("high")
+
+
+def _job(jid, *, priority=DEFAULT_PRIORITY, tenant=None, g=4,
+         t_run=50_000.0):
+    j = Job(job_id=jid, model="yi-9b", n_gpus=g, total_iters=1000,
+            compute_time_per_iter=10.0, tenant=tenant, priority=priority)
+    j.t_run = t_run
+    j.iters_done = 100
+    j.iter_time = 12.0
+    j.run_start = 0.0
+    j.last_assignment_time = 0.0
+    return j
+
+
+# -- priority classes in the scoring functions -------------------------------
+
+def test_priority_class_reorders_tiresias_levels():
+    """The class multiplier scales attained service: at the same true
+    2DAS a low job sinks to a deeper MLFQ level, a high job floats to a
+    shallower one (lower priority value = served first)."""
+    pol = make_policy("tiresias")
+    now = 60_000.0
+    # true das = t_run * n_gpus = 25_000 * 4 = 100_000: between the two
+    # thresholds (28_800 / 230_400), so x4 crosses up into level 2 and
+    # x0.25 drops below the first threshold into level 0
+    lo, no, hi = (_job(0, priority=LOW, t_run=25_000.0),
+                  _job(1, priority=NORMAL, t_run=25_000.0),
+                  _job(2, priority=HIGH, t_run=25_000.0))
+    for j in (lo, no, hi):
+        j.placement = None  # frozen das: no in-flight segment
+    assert pol.priority(hi, now) < pol.priority(no, now) \
+        < pol.priority(lo, now)
+    # default class is untouched by the guard: same value as an
+    # identical job predating the priority field
+    legacy = _job(3, t_run=25_000.0)
+    legacy.placement = None
+    assert pol.priority(no, now) == pol.priority(legacy, now)
+
+
+@pytest.mark.parametrize("policy", ["dally", "tiresias"])
+def test_priority_many_matches_scalar_bitwise(policy):
+    """The vectorized scorer applies the class multipliers elementwise
+    and must equal the guarded scalar path to the last bit — mixed
+    populations included (default entries multiply by exactly 1.0)."""
+    pol = make_policy(policy)
+    now = 90_000.0
+    jobs = [_job(i, priority=[LOW, NORMAL, HIGH][i % 3], g=1 + i % 8,
+                 t_run=1000.0 * (i + 1) ** 2) for i in range(12)]
+    many = pol.priority_many(jobs, now)
+    if many is None:
+        pytest.skip("numpy unavailable: scalar path only")
+    for i, j in enumerate(jobs):
+        assert many[i] == pol.priority(j, now), i
+
+
+def test_priority_mults_default_population_returns_none():
+    """All-default populations take the no-multiply fast path: the
+    vector twin sees None and skips the elementwise product entirely —
+    the decision-identity guarantee does not ride on float luck."""
+    assert priority_mults_many([_job(i) for i in range(5)]) is None
+    mults = priority_mults_many([_job(0), _job(1, priority=HIGH)])
+    if mults is not None:
+        assert list(mults) == [PRIORITY_MULT[DEFAULT_PRIORITY],
+                               PRIORITY_MULT[HIGH]]
+
+
+# -- the preemption-class gate -----------------------------------------------
+
+def test_preemption_class_gate_filters_victims():
+    sim = ClusterSimulator(ClusterTopology(n_racks=1),
+                           make_policy("dally"), COMM)
+    lo, no, hi = (_job(0, priority=LOW), _job(1, priority=NORMAL),
+                  _job(2, priority=HIGH))
+    sim.running = [lo, no, hi]
+    now = 1e7  # far past preemption_min_runtime for every job
+    prio = lambda j: 100.0  # noqa: E731 — every job scores above threshold
+    # a low-priority evictor may only evict its own class; high evicts all
+    assert sim._preemption_victims(now, 0.0, prio, evictor_class=LOW) \
+        == [lo]
+    assert sim._preemption_victims(now, 0.0, prio, evictor_class=NORMAL) \
+        == [lo, no]
+    assert sim._preemption_victims(now, 0.0, prio, evictor_class=HIGH) \
+        == [lo, no, hi]
+    # the default (no explicit class) is the ungated legacy scan
+    assert sim._preemption_victims(now, 0.0, prio) == [lo, no, hi]
+
+
+# -- decision identity & the v7 artifact -------------------------------------
+
+def _run(jobs, policy="dally"):
+    sim = ClusterSimulator(ClusterTopology(n_racks=2),
+                           make_policy(policy), COMM)
+    for j in jobs:
+        sim.submit(j)
+    return sim.run()
+
+
+def test_tenant_labels_alone_change_nothing_but_the_tenants_key():
+    """Tenant labels with every job at the default priority class must
+    not move a single float: the schedule is bit-identical, the results
+    dict differs only by the added per-tenant fold."""
+    ref = _run(make_mixed_trace(ARCHS_L, n_jobs=30, seed=4))
+    mt = _run(make_multi_tenant_trace(
+        ARCHS_L, n_jobs=30, seed=4, priority_pmf=(("normal", 1.0),)))
+    tenants = mt.pop("tenants")
+    assert mt == ref
+    assert sum(t["n_jobs"] for t in tenants.values()) == 30
+    assert sum(t["n_finished"] for t in tenants.values()) \
+        == ref["n_finished"]
+
+
+def test_multi_tenant_scenario_emits_v7_artifact():
+    art = run_one("multi-tenant", policy="dally", seed=0,
+                  overrides=SimOverrides(n_jobs=25))
+    assert art["schema"] == "repro.experiments.artifact/v7"
+    tenants = art["metrics"]["tenants"]
+    assert tenants and all(set(t) == {
+        "n_jobs", "n_finished", "n_gpus_demanded", "gpu_seconds",
+        "queue_seconds"} for t in tenants.values())
+    # deterministic: the fold is sorted, so a re-run is byte-equal
+    again = run_one("multi-tenant", policy="dally", seed=0,
+                    overrides=SimOverrides(n_jobs=25))
+    assert again["metrics"]["tenants"] == tenants
+
+
+# -- jobspec v2 wire form ----------------------------------------------------
+
+def test_jobspec_v1_roundtrips_with_v1_schema_bytes():
+    spec = JobSpec(name="legacy", model="yi-9b", n_gpus=8, gpu_hours=2.0)
+    wire = spec.to_dict()
+    assert wire["schema"] == JOBSPEC_SCHEMA
+    assert "tenant" not in wire and "priority" not in wire
+    back = JobSpec.from_dict(wire)
+    assert back == spec
+    assert back.priority_class() == DEFAULT_PRIORITY
+
+
+def test_jobspec_v2_roundtrip_and_derivation():
+    spec = JobSpec.from_dict({
+        "schema": JOBSPEC_SCHEMA_V2, "name": "team-a/run", "model": "yi-9b",
+        "n_gpus": 8, "gpu_hours": 2.0, "tenant": "team-a",
+        "priority": "high"})
+    wire = spec.to_dict()
+    assert wire["schema"] == JOBSPEC_SCHEMA_V2
+    assert wire["tenant"] == "team-a" and wire["priority"] == "high"
+    assert JobSpec.from_dict(wire) == spec
+    job = spec.build_job(7, dict(ARCHS))
+    assert job.tenant == "team-a"
+    assert job.priority == HIGH
+    # v2 fields are accepted without the explicit schema string too
+    implicit = JobSpec.from_dict({"name": "t", "model": "yi-9b",
+                                  "n_gpus": 1, "gpu_hours": 1.0,
+                                  "priority": "low"})
+    assert implicit.to_dict()["schema"] == JOBSPEC_SCHEMA_V2
+
+
+# -- admission policy --------------------------------------------------------
+
+def test_admission_policy_decide_caps():
+    ledger = TenantLedger()
+    for i in range(3):
+        ledger.note_submit(_job(i, tenant="busy", g=8))
+    spec = JobSpec(name="x", model="yi-9b", n_gpus=8, gpu_hours=1.0,
+                   tenant="busy")
+    other = JobSpec(name="y", model="yi-9b", n_gpus=8, gpu_hours=1.0,
+                    tenant="calm")
+    assert AdmissionPolicy().decide(spec, ledger) is None  # no caps
+    per = AdmissionPolicy(max_waiting_jobs_per_tenant=3)
+    assert "waiting jobs" in per.decide(spec, ledger)
+    assert per.decide(other, ledger) is None  # caps are per-tenant
+    wide = AdmissionPolicy(max_waiting_gpus=24)
+    assert "exceed the cap" in wide.decide(other, ledger)  # 24 + 8 > 24
+    assert AdmissionPolicy(max_waiting_gpus=32).decide(other, ledger) \
+        is None
+    # wire form rejects unknown fields (config-typo guard)
+    with pytest.raises(ValueError, match="unknown admission-policy"):
+        AdmissionPolicy.from_dict({"max_waiting_jobs": 3})
+    assert AdmissionPolicy.from_dict(per.to_dict()) == per
+
+
+def test_tenant_ledger_transitions():
+    led = TenantLedger()
+    j = _job(0, tenant="a", g=4)
+    led.note_submit(j)
+    assert led.as_dict()["a"]["waiting_jobs"] == 1
+    assert led.total_waiting_gpus() == 4
+    led.note_op("place", 10.0, {"job_id": 0})
+    b = led.as_dict()["a"]
+    assert (b["waiting_jobs"], b["running_jobs"], b["running_gpus"]) \
+        == (0, 1, 4)
+    led.note_op("preempt", 20.0, {"job_id": 0})
+    assert led.as_dict()["a"]["waiting_jobs"] == 1
+    led.note_op("place", 30.0, {"job_id": 0})
+    j.t_run = 500.0
+    led.note_op("complete", 530.0, {"job_id": 0}, job=j)
+    b = led.as_dict()["a"]
+    assert (b["running_jobs"], b["n_finished"]) == (0, 1)
+    assert b["gpu_seconds"] == 500.0 * 4
+    # ops for unregistered jobs (streamed background load) are ignored
+    led.note_op("place", 40.0, {"job_id": 999})
+    assert led.as_dict() == {"a": b}
+    # default-tenant bucketing for unlabelled jobs
+    led.note_submit(_job(1, g=2))
+    assert led.as_dict()[DEFAULT_TENANT]["waiting_gpus"] == 2
+    # restore round-trip
+    clone = TenantLedger()
+    clone.restore(led.as_dict())
+    assert clone.as_dict() == led.as_dict()
+
+
+# -- the service: admission, the ledger, and crash recovery ------------------
+
+MT_SPECS = [
+    {"name": f"mt-{i:03d}", "model": m, "n_gpus": g, "gpu_hours": h,
+     "arrival": i * 200.0, "tenant": t, "priority": p}
+    for i, (m, g, h, t, p) in enumerate([
+        ("yi-9b", 8, 2.0, "prod", "high"),
+        ("qwen3-1.7b", 1, 0.5, "burst", "low"),
+        ("qwen2-moe-a2.7b", 4, 1.0, "burst", "normal"),
+        ("recurrentgemma-2b", 2, 0.8, "research", "normal"),
+        ("minicpm3-4b", 16, 3.0, "burst", "low"),
+        ("yi-9b", 4, 1.5, "prod", "normal"),
+        ("qwen3-1.7b", 2, 0.3, "burst", "high"),
+        ("qwen3-moe-30b-a3b", 8, 2.5, "research", "low"),
+    ])]
+MT_POLICY = AdmissionPolicy(max_waiting_jobs_per_tenant=3)
+
+
+def _run_mt_service(state_dir, events_per_tick=7, snapshot_every=10,
+                    crash_after_ticks=None):
+    """Submit MT_SPECS through an admission policy ("burst" goes over
+    quota on its 4th spec), then drain — or crash after N ticks."""
+    svc = SchedulerService(state_dir, scenario="smoke", seed=0,
+                           overrides=SimOverrides(contention="fair-share"),
+                           events_per_tick=events_per_tick,
+                           snapshot_every=snapshot_every,
+                           admission=MT_POLICY)
+    rejected = []
+    for s in MT_SPECS:
+        try:
+            svc.submit(s)
+        except AdmissionRejected:
+            rejected.append(s["name"])
+    assert rejected == ["mt-006"]  # burst's 4th spec, every run
+    ticks = 0
+    while not svc.sim.idle:
+        svc.tick()
+        ticks += 1
+        if crash_after_ticks and ticks >= crash_after_ticks:
+            svc.close()
+            return None
+    art = svc.finalize()
+    svc.close()
+    return art
+
+
+def test_service_admission_journal_and_artifact(tmp_path):
+    art = _run_mt_service(tmp_path / "svc")
+    assert art["admission"]["policy"] == MT_POLICY.to_dict()
+    assert art["admission"]["n_admitted"] == 7
+    assert art["admission"]["n_rejected"] == 1
+    reject = [e for e in art["admission"]["log"]
+              if e["decision"] == "reject"]
+    assert reject == [{"name": "mt-006", "tenant": "burst", "n_gpus": 2,
+                       "decision": "reject",
+                       "reason": reject[0]["reason"]}]
+    assert "3 waiting jobs" in reject[0]["reason"]
+    # the journal carries the same decisions (the audit trail)
+    recs = Journal.read(tmp_path / "svc" / "journal.jsonl")
+    adm = [r for r in recs if r["type"] == "admission"]
+    assert [r["decision"] for r in adm].count("reject") == 1
+    # the ledger made it into the artifact and adds up
+    tenants = art["tenants"]
+    assert sorted(tenants) == ["burst", "prod", "research"]
+    assert sum(t["n_finished"] for t in tenants.values()) == 7
+    assert all(t["waiting_jobs"] == 0 and t["running_jobs"] == 0
+               for t in tenants.values())
+    assert tenants["prod"]["gpu_seconds"] > 0.0
+
+
+def test_rejected_name_can_resubmit_once_load_drains(tmp_path):
+    svc = SchedulerService(tmp_path / "svc", scenario="smoke",
+                           admission=AdmissionPolicy(
+                               max_waiting_jobs_per_tenant=1))
+    svc.submit({"name": "a", "model": "yi-9b", "n_gpus": 1,
+                "gpu_hours": 0.2, "tenant": "t"})
+    with pytest.raises(AdmissionRejected):
+        svc.submit({"name": "b", "model": "yi-9b", "n_gpus": 1,
+                    "gpu_hours": 0.2, "tenant": "t"})
+    while not svc.sim.idle:
+        svc.tick()
+    # "a" finished -> the tenant's waiting pool is empty again
+    svc.submit({"name": "b", "model": "yi-9b", "n_gpus": 1,
+                "gpu_hours": 0.2, "tenant": "t"})
+    state = svc.cluster_state()
+    assert state["tenants"]["t"]["waiting_jobs"] == 1
+    svc.close()
+
+
+def test_multitenant_crash_recovery_byte_identity(tmp_path):
+    ref = _run_mt_service(tmp_path / "ref")
+    ref_bytes = (tmp_path / "ref" / "artifact.json").read_bytes()
+    assert _run_mt_service(tmp_path / "crash", crash_after_ticks=5) is None
+    # restart: config (admission policy included) comes from disk;
+    # different tick size on purpose — batching must stay invisible
+    svc = SchedulerService(tmp_path / "crash", events_per_tick=13)
+    while not svc.sim.idle:
+        svc.tick()
+    art = svc.finalize()
+    svc.close()
+    assert (tmp_path / "crash" / "artifact.json").read_bytes() == ref_bytes
+    # the recovered ledger and admission log are exact, not just the sim
+    assert art["tenants"] == ref["tenants"]
+    assert art["admission"] == ref["admission"]
+
+
+def test_recovery_without_snapshot_refolds_ledger(tmp_path):
+    ref = _run_mt_service(tmp_path / "ref")
+    assert _run_mt_service(tmp_path / "crash", snapshot_every=10**9,
+                           crash_after_ticks=4) is None
+    recs = Journal.read(tmp_path / "crash" / "journal.jsonl")
+    assert not [r for r in recs if r["type"] == "snapshot"]
+    svc = SchedulerService(tmp_path / "crash")
+    while not svc.sim.idle:
+        svc.tick()
+    art = svc.finalize()
+    svc.close()
+    assert art["tenants"] == ref["tenants"]
+
+
+def test_single_tenant_service_artifact_keeps_legacy_shape(tmp_path):
+    """No admission policy + v1 specs: the artifact must not grow
+    tenants/admission keys (absent key = legacy bytes), and the journal
+    must carry no admission records."""
+    svc = SchedulerService(tmp_path / "svc", scenario="smoke")
+    svc.submit({"name": "solo", "model": "yi-9b", "n_gpus": 2,
+                "gpu_hours": 0.3})
+    while not svc.sim.idle:
+        svc.tick()
+    art = svc.finalize()
+    svc.close()
+    assert "tenants" not in art and "admission" not in art
+    assert "tenants" not in svc.cluster_state()
+    recs = Journal.read(tmp_path / "svc" / "journal.jsonl")
+    assert not [r for r in recs if r["type"] == "admission"]
+    # but a single v2 spec flips the gate, policy or not
+    svc2 = SchedulerService(tmp_path / "svc2", scenario="smoke")
+    svc2.submit({"name": "labelled", "model": "yi-9b", "n_gpus": 2,
+                 "gpu_hours": 0.3, "tenant": "team-a"})
+    assert svc2.cluster_state()["tenants"]["team-a"]["waiting_jobs"] == 1
+    svc2.close()

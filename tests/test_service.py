@@ -217,6 +217,88 @@ def test_inbox_ingestion_and_rejection(tmp_path):
     svc.close()
 
 
+def test_inbox_type_malformed_specs_quarantined_not_fatal(tmp_path):
+    """Regression: a JSON-valid spec with a string where a number belongs
+    (arrival/gpu_hours) used to escape validation and raise TypeError
+    deep inside submit() — outside poll_inbox's catch — killing the
+    daemon.  Every spec-derived failure must land in rejected/ with an
+    .error note while the daemon keeps serving."""
+    inbox = tmp_path / "inbox"
+    inbox.mkdir()
+    (inbox / "bad-arrival.json").write_text(json.dumps(
+        {"name": "bad-arrival", "model": "yi-9b", "n_gpus": 1,
+         "gpu_hours": 1.0, "arrival": "soon"}))
+    (inbox / "bad-hours.json").write_text(json.dumps(
+        {"name": "bad-hours", "model": "yi-9b", "n_gpus": 1,
+         "gpu_hours": "2.0"}))
+    (inbox / "bad-tokens.json").write_text(json.dumps(
+        {"name": "bad-tokens", "model": "yi-9b", "n_gpus": 1,
+         "gpu_hours": 1.0, "tokens_per_gpu_iter": 0}))
+    (inbox / "good.json").write_text(json.dumps(
+        {"name": "good", "model": "yi-9b", "n_gpus": 1, "gpu_hours": 0.2}))
+    svc = SchedulerService(tmp_path / "s", scenario="smoke", inbox=inbox)
+    assert svc.tick() >= 1  # the good spec got in; the daemon survived
+    rejected = sorted(p.name for p in (inbox / "rejected").glob("*.json"))
+    assert rejected == ["bad-arrival.json", "bad-hours.json",
+                       "bad-tokens.json"]
+    for name, field in [("bad-arrival.json", "arrival"),
+                        ("bad-hours.json", "gpu_hours"),
+                        ("bad-tokens.json", "tokens_per_gpu_iter")]:
+        assert field in (inbox / "rejected" / (name + ".error")).read_text()
+    assert len(list((inbox / "processed").glob("*.json"))) == 1
+    # still alive and accepting
+    svc.submit({"name": "after", "model": "yi-9b", "n_gpus": 1,
+                "gpu_hours": 0.2})
+    svc.close()
+
+
+def test_snapshot_fsyncs_data_and_directory(tmp_path, monkeypatch):
+    """Regression: snapshot() promised fsync-before-journal but never
+    called fsync — a power cut could leave the journal marker pointing at
+    a snapshot whose pages were still in the page cache.  Pin that the
+    tmp-file data AND the snapshot directory entry are both fsynced."""
+    import stat
+    kinds = []
+    real_fsync = os.fsync
+
+    def spy(fd):
+        kinds.append("dir" if stat.S_ISDIR(os.fstat(fd).st_mode)
+                     else "file")
+        return real_fsync(fd)
+
+    svc = SchedulerService(tmp_path / "s", scenario="smoke")
+    svc.submit(SPECS[0])
+    monkeypatch.setattr(os, "fsync", spy)
+    svc.snapshot()
+    # at least: the snapshot tmp file, the snapshots/ directory, and the
+    # durable journal marker record
+    assert "dir" in kinds
+    assert kinds.count("file") >= 2
+    svc.close()
+
+
+def test_submission_only_activity_triggers_snapshot(tmp_path):
+    """Regression: the snapshot trigger was gated on stepped events, so a
+    submit-heavy quiet cluster (jobs journaled, nothing schedulable yet)
+    never checkpointed and its recovery replay grew without bound.
+    Accepted submissions must count toward the cadence."""
+    svc = SchedulerService(tmp_path / "s", scenario="smoke",
+                           snapshot_every=4)
+    for s in SPECS[:5]:
+        # arrivals far in the future: accepting them steps zero events
+        svc.submit({**s, "arrival": 1e12})
+    svc.tick(max_events=0)
+    recs = Journal.read(tmp_path / "s" / "journal.jsonl")
+    snaps = [r for r in recs if r["type"] == "snapshot"]
+    assert len(snaps) == 1
+    assert snaps[0]["n_submits"] == 5
+    # and the counter reset: an idle daemon must not re-checkpoint
+    svc.tick(max_events=0)
+    recs = Journal.read(tmp_path / "s" / "journal.jsonl")
+    assert len([r for r in recs if r["type"] == "snapshot"]) == 1
+    svc.close()
+
+
 def test_inbox_run_matches_in_process_submissions(tmp_path):
     ov = SimOverrides(contention="fair-share")
     ref = _run_service(tmp_path / "ref", ov)
@@ -258,7 +340,23 @@ def test_jobspec_validation():
                            "model": "yi-9b", "n_gpus": 1, "gpu_hours": 1.0})
     with pytest.raises(JobSpecError, match="unknown job-spec field"):
         JobSpec.from_dict({"name": "x", "model": "yi-9b", "n_gpus": 1,
+                           "gpu_hours": 1.0, "urgency": 99})
+    # v2 fields exist now, but their values are still validated
+    with pytest.raises(JobSpecError, match="unknown priority"):
+        JobSpec.from_dict({"name": "x", "model": "yi-9b", "n_gpus": 1,
                            "gpu_hours": 1.0, "priority": 99})
+    with pytest.raises(JobSpecError, match="tenant"):
+        JobSpec(name="x", model="yi-9b", n_gpus=1, gpu_hours=1.0, tenant="")
+    # type-malformed numerics must be caught at spec construction, not
+    # deep inside the daemon's submit path (the poll_inbox crash bug)
+    with pytest.raises(JobSpecError, match="arrival"):
+        JobSpec(name="x", model="yi-9b", n_gpus=1, gpu_hours=1.0,
+                arrival="soon")
+    with pytest.raises(JobSpecError, match="gpu_hours"):
+        JobSpec(name="x", model="yi-9b", n_gpus=1, gpu_hours="2.0")
+    with pytest.raises(JobSpecError, match="tokens_per_gpu_iter"):
+        JobSpec(name="x", model="yi-9b", n_gpus=1, gpu_hours=1.0,
+                tokens_per_gpu_iter=0)
 
 
 def test_jobspec_derivation_mirrors_trace_makers():

@@ -11,6 +11,13 @@ ruff has no custom rules, so this walks the AST: every call whose name
 matches a rule and whose keywords intersect that rule's legacy set is a
 violation.
 
+With the jobspec v2 surface (tenant / priority) there is a second rule
+class: schema version strings.  Any code comparing or emitting a
+``repro.service.jobspec/v*`` literal outside ``service/jobspec.py`` is
+one silent typo away from misclassifying every v2 spec — it must import
+``JOBSPEC_SCHEMA`` / ``JOBSPEC_SCHEMA_V2`` instead, so version bumps
+stay one-file changes.
+
     python tools/check_legacy_kwargs.py [root...]
 
 Exit 0 = clean; exit 1 = violations listed on stdout.
@@ -45,6 +52,9 @@ DEFAULT_ROOTS = ("src", "benchmarks")
 # the shim implementations themselves (define/forward the legacy names)
 EXEMPT = {pathlib.Path("src/repro/experiments/runner.py"),
           pathlib.Path("src/repro/experiments/scenario.py")}
+# jobspec schema strings: only their defining module may spell them out
+SCHEMA_LITERAL_PREFIX = "repro.service.jobspec/"
+SCHEMA_EXEMPT = {pathlib.Path("src/repro/service/jobspec.py")}
 
 
 def _call_name(node: ast.Call) -> str:
@@ -64,6 +74,14 @@ def check_file(path: pathlib.Path) -> list:
         return []
     out = []
     for node in ast.walk(tree):
+        if (isinstance(node, ast.Constant) and isinstance(node.value, str)
+                and node.value.startswith(SCHEMA_LITERAL_PREFIX)
+                and path not in SCHEMA_EXEMPT):
+            out.append((path, node.lineno, "<literal>",
+                        [repr(node.value)],
+                        "the JOBSPEC_SCHEMA* constant from "
+                        "repro.service.jobspec"))
+            continue
         if not isinstance(node, ast.Call):
             continue
         rule = RULES.get(_call_name(node))
@@ -86,9 +104,13 @@ def main(argv=None) -> int:
                 continue
             violations.extend(check_file(path))
     for path, line, fn, bad, hint in violations:
-        print(f"{path}:{line}: {fn}() uses deprecated legacy kwarg(s) "
-              f"{', '.join(bad)} — pass {hint} "
-              "instead (docs/experiments.md)")
+        if fn == "<literal>":
+            print(f"{path}:{line}: hardcoded jobspec schema string "
+                  f"{', '.join(bad)} — use {hint} instead")
+        else:
+            print(f"{path}:{line}: {fn}() uses deprecated legacy kwarg(s) "
+                  f"{', '.join(bad)} — pass {hint} "
+                  "instead (docs/experiments.md)")
     if violations:
         return 1
     print(f"legacy-kwarg guard: clean "

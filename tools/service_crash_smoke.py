@@ -36,6 +36,22 @@ MODELS = ["yi-9b", "qwen3-1.7b", "qwen2-moe-a2.7b", "recurrentgemma-2b",
           "minicpm3-4b", "qwen3-moe-30b-a3b"]
 
 
+#: the multi-tenant variant's admission policy: "burst" owns every other
+#: spec, so it alone accumulates more than seven waiting jobs during the
+#: first inbox poll and gets its surplus rejected — the rejection path
+#: is exercised deterministically (the whole inbox is ingested in one
+#: poll, before any event is stepped, so the decisions are a pure
+#: function of the filename-sorted sequence)
+MT_ADMISSION = {"max_waiting_jobs_per_tenant": 7}
+MT_PRIORITIES = ["low", "normal", "normal", "high"]
+
+
+def mt_tenant(i: int) -> str:
+    if i % 2 == 0:
+        return "burst"
+    return "prod" if i % 4 == 1 else "research"
+
+
 def make_specs(n: int) -> list:
     """A deterministic mixed workload: arrivals spread over simulated
     hours so the daemon is mid-schedule (not drained) when killed."""
@@ -51,19 +67,34 @@ def make_specs(n: int) -> list:
     return specs
 
 
+def make_mt_specs(n: int) -> list:
+    """The same workload wearing jobspec-v2 tenant/priority labels:
+    with MT_ADMISSION exactly one tenant ("burst") goes over quota
+    while the other two stay under it."""
+    specs = make_specs(n)
+    for i, s in enumerate(specs):
+        s["name"] = f"mt-{i:03d}"
+        s["tenant"] = mt_tenant(i)
+        s["priority"] = MT_PRIORITIES[i % len(MT_PRIORITIES)]
+    return specs
+
+
 def fill_inbox(inbox: pathlib.Path, specs) -> None:
     inbox.mkdir(parents=True, exist_ok=True)
     for s in specs:
         (inbox / f"{s['name']}.json").write_text(json.dumps(s))
 
 
-def daemon_cmd(state_dir, inbox, overrides, *extra, stream=False) -> list:
+def daemon_cmd(state_dir, inbox, overrides, *extra, stream=False,
+               admission=None) -> list:
     cmd = [sys.executable, "-m", "repro.service",
            "--state-dir", str(state_dir), "--inbox", str(inbox),
            "--scenario", "smoke", "--events-per-tick", "5",
            "--snapshot-every", "25", "--tick-sleep", "0.01"]
     if overrides:
         cmd += ["--overrides", json.dumps(overrides)]
+    if admission:
+        cmd += ["--admission", json.dumps(admission)]
     if stream:
         # the scenario's 60-job trace streams in through the lazy source
         # cursor alongside the inbox; snapshot-every=25 means the first
@@ -86,7 +117,7 @@ def digest(path: pathlib.Path) -> str:
 
 
 def journal_counts(journal: pathlib.Path) -> dict:
-    counts = {"submit": 0, "snapshot": 0, "event": 0}
+    counts = {"submit": 0, "snapshot": 0, "event": 0, "admission": 0}
     if journal.exists():
         for line in journal.read_text().splitlines():
             try:
@@ -106,36 +137,65 @@ def main(argv=None) -> int:
                     help="attach the scenario trace as a streamed source "
                     "(--stream-trace): proves the source cursor rides the "
                     "snapshot and recovery stays byte-identical")
+    ap.add_argument("--multi-tenant", action="store_true",
+                    help="jobspec-v2 workload (tenants + mixed priorities) "
+                    "behind an admission policy with one tenant over "
+                    "quota: proves admission decisions, the rejection "
+                    "path, and the tenant ledger all recover "
+                    "byte-identically")
     ap.add_argument("--kill-timeout", type=float, default=120.0)
     args = ap.parse_args(argv)
 
     work = pathlib.Path(args.workdir or tempfile.mkdtemp(prefix="svc-smoke-"))
     work.mkdir(parents=True, exist_ok=True)
     overrides = json.loads(args.overrides) if args.overrides else None
-    specs = make_specs(args.n_specs)
+    admission = MT_ADMISSION if args.multi_tenant else None
+    specs = (make_mt_specs(args.n_specs) if args.multi_tenant
+             else make_specs(args.n_specs))
 
     # 1+2: uninterrupted reference
     ref_inbox, ref_state = work / "ref-inbox", work / "ref-state"
     fill_inbox(ref_inbox, specs)
     subprocess.run(daemon_cmd(ref_state, ref_inbox, overrides,
-                              "--exit-when-idle", stream=args.stream),
+                              "--exit-when-idle", stream=args.stream,
+                              admission=admission),
                    check=True, env=env(), cwd=REPO, timeout=600)
     ref = digest(ref_state / "artifact.json")
     print(f"reference digest: {ref}")
+    if args.multi_tenant:
+        art = json.loads((ref_state / "artifact.json").read_text())
+        n_rej = art.get("admission", {}).get("n_rejected", 0)
+        print(f"admission: {art['admission']['n_admitted']} admitted, "
+              f"{n_rej} rejected; tenants: {sorted(art['tenants'])}")
+        if n_rej == 0:
+            print("FAIL: the multi-tenant workload was supposed to drive "
+                  "one tenant over quota")
+            return 1
+        rejected = sorted(p.name for p in (ref_inbox / "rejected")
+                          .glob("*.json"))
+        if len(rejected) != n_rej:
+            print(f"FAIL: {n_rej} admission rejections but "
+                  f"{len(rejected)} specs in rejected/")
+            return 1
 
     # 3: throttled daemon, killed mid-run
     inbox, state = work / "inbox", work / "state"
     fill_inbox(inbox, specs)
     proc = subprocess.Popen(
         daemon_cmd(state, inbox, overrides, "--throttle", "0.05",
-                   stream=args.stream),
+                   stream=args.stream, admission=admission),
         env=env(), cwd=REPO)
     journal = state / "journal.jsonl"
     deadline = time.time() + args.kill_timeout
+    # admission-rejected specs never become submit records, so in the
+    # multi-tenant run wait on the per-spec admission decisions instead
+    done_ingesting = (
+        (lambda c: c["admission"] >= args.n_specs) if args.multi_tenant
+        else (lambda c: c["submit"] == args.n_specs))
     try:
         while time.time() < deadline:
             c = journal_counts(journal)
-            if c["snapshot"] >= 1 and c["submit"] == args.n_specs:
+            if c["snapshot"] >= 1 and done_ingesting(c):
                 break
             if proc.poll() is not None:
                 print("FAIL: daemon exited before it could be killed "
@@ -156,7 +216,7 @@ def main(argv=None) -> int:
 
     # 4: recover and drain
     subprocess.run(daemon_cmd(state, inbox, overrides, "--exit-when-idle",
-                              stream=args.stream),
+                              stream=args.stream, admission=admission),
                    check=True, env=env(), cwd=REPO, timeout=600)
     rec = digest(state / "artifact.json")
     print(f"recovered digest: {rec}")
